@@ -1,0 +1,62 @@
+"""Quickstart: the pFedSOP optimizer on a 2-client toy problem.
+
+Shows the paper's three moving parts in ~40 lines of user code:
+  1. Gompertz-weighted personalized aggregation of local/global updates
+  2. Sherman-Morrison second-order step on the regularized FIM
+  3. local SGD + server aggregation of gradient updates
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfedsop as pf
+
+# two clients with different optima - a miniature "heterogeneous federation"
+TARGETS = [2.0, -1.0]
+
+
+def make_loss(target):
+    def loss_fn(params, batch):
+        noise = batch  # (batch_size,) pseudo-noise, keeps SGD stochastic
+        err = params["w"][None, :] - target + 0.01 * noise[:, None]
+        return 0.5 * jnp.mean(err**2)
+    return loss_fn
+
+
+def main():
+    cfg = pf.PFedSOPConfig(eta1=0.8, eta2=0.2, rho=1.0, lam=1.0)
+    params = {"w": jnp.zeros((4,))}
+    states = [pf.init_client_state(params) for _ in TARGETS]
+    global_delta = {"w": jnp.zeros((4,))}
+    has_global = jnp.asarray(False)
+
+    key = jax.random.PRNGKey(0)
+    print(f"{'round':>5} {'client0 w[0]':>12} {'client1 w[0]':>12} {'beta0':>7}")
+    for t in range(25):
+        deltas, metrics = [], []
+        for i, target in enumerate(TARGETS):
+            key, sub = jax.random.split(key)
+            batches = jax.random.normal(sub, (5, 8))  # 5 local SGD iterations
+            states[i], delta, m = pf.client_round(
+                make_loss(target), states[i], global_delta, has_global, batches, cfg
+            )
+            deltas.append(delta)
+            metrics.append(m)
+        # server: Eq. 13
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        global_delta, has_global = pf.server_aggregate(stacked), jnp.asarray(True)
+        if t % 5 == 0 or t == 24:
+            print(f"{t:>5} {float(states[0].params['w'][0]):>12.4f} "
+                  f"{float(states[1].params['w'][0]):>12.4f} "
+                  f"{float(metrics[0]['beta']):>7.3f}")
+
+    for i, target in enumerate(TARGETS):
+        err = float(jnp.max(jnp.abs(states[i].params["w"] - target)))
+        print(f"client {i}: |w - {target}| = {err:.4f} (personalized, not the global mean)")
+        assert err < 0.2, "personalization failed"
+    print("OK: each client converged to ITS OWN optimum under collaboration.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Serving example: batched autoregressive decode through the framework's
+serve path (KV caches / SSM recurrent state), CPU-sized.
+
+Serves a reduced variant of any assigned architecture: prefill a batch of
+prompts, then decode greedily - the same decode_step the dry-run lowers at
+(arch x decode_32k / long_500k) production shapes.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch gemma3-1b --tokens 16
+  PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b   # O(1)-state decode
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    print(f"serving {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"family={cfg.family} vocab={cfg.vocab_size}")
+    params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    b, pl_, total = args.batch, args.prompt_len, args.prompt_len + args.tokens
+    if cfg.frontend == "audio_codebooks":
+        prompts = jax.random.randint(key, (b, cfg.n_codebooks, pl_), 0, cfg.vocab_size)
+    else:
+        prompts = jax.random.randint(key, (b, pl_), 0, cfg.vocab_size)
+
+    caches = tf.init_caches(cfg, b, total)
+
+    @jax.jit
+    def decode_one(params, tok, pos, caches):
+        batch = {"tokens": tok}
+        if cfg.frontend == "vision_stub":
+            batch["patch_embeds"] = jnp.zeros((b, 0, cfg.d_vision), jnp.float32)
+        logits, caches = tf.decode_step(params, cfg, batch, pos, caches)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    # prefill token-by-token (the production path prefills via forward();
+    # here we exercise the cache ring-buffers end to end)
+    t0 = time.perf_counter()
+    out_tokens = []
+    for t in range(pl_):
+        tok = prompts[:, :, t:t+1] if cfg.frontend == "audio_codebooks" else prompts[:, t:t+1]
+        nxt, caches = decode_one(params, tok, jnp.asarray(t, jnp.int32), caches)
+    cur = nxt[..., None] if cfg.frontend != "audio_codebooks" else jnp.broadcast_to(
+        nxt[..., None, None], (b, cfg.n_codebooks, 1)).astype(jnp.int32)
+    for t in range(pl_, total):
+        out_tokens.append(np.asarray(cur))
+        nxt, caches = decode_one(params, cur, jnp.asarray(t, jnp.int32), caches)
+        cur = nxt[..., None] if cfg.frontend != "audio_codebooks" else jnp.broadcast_to(
+            nxt[..., None, None], (b, cfg.n_codebooks, 1)).astype(jnp.int32)
+    dt = time.perf_counter() - t0
+
+    gen = np.concatenate(out_tokens, axis=-1)
+    print(f"decoded {args.tokens} tokens x {b} sequences in {dt:.2f}s "
+          f"({args.tokens * b / dt:.1f} tok/s incl. prefill + compile)")
+    print("sample token ids:", gen.reshape(b, -1)[:, :10])
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab_size)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

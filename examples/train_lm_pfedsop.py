@@ -1,0 +1,85 @@
+"""Federated LM training with pFedSOP over the assigned transformer archs.
+
+Four simulated organizations ("cross-silo" FL), each with its own Markov
+token distribution (heterogeneity analog), collaboratively train reduced
+variants of an assigned architecture with the pFedSOP optimizer - the
+CPU-scale mirror of the multi-pod deployment lowered by dryrun.py.
+
+  PYTHONPATH=src python examples/train_lm_pfedsop.py --arch granite-3-2b --rounds 10
+  PYTHONPATH=src python examples/train_lm_pfedsop.py --arch olmoe-1b-7b   # MoE path
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core import pfedsop as pf
+from repro.data import lm_batch_iterator, synthetic_lm_stream
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_NAMES), default="granite-3-2b")
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--local-iters", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--eta", type=float, default=0.1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=True)
+    if cfg.frontend != "none":
+        raise SystemExit(f"{args.arch} needs a modality frontend; this example "
+                         "covers the text archs (see serve_decode.py for the rest)")
+    pcfg = pf.PFedSOPConfig(eta1=args.eta, eta2=args.eta, rho=1.0, lam=1.0)
+
+    print(f"pFedSOP x {cfg.name}: {args.clients} clients, {args.rounds} rounds")
+    params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.2f}M")
+
+    # per-client heterogeneous token streams
+    iters = [
+        lm_batch_iterator(
+            synthetic_lm_stream(20_000, cfg.vocab_size, seed=100 + i, branch=3),
+            args.batch, args.seq_len, seed=i)
+        for i in range(args.clients)
+    ]
+
+    loss_fn = lambda p, b: tf.lm_loss(p, cfg, b)
+    states = [pf.init_client_state(params) for _ in range(args.clients)]
+    global_delta = jax.tree.map(jnp.zeros_like, params)
+    has_global = jnp.asarray(False)
+
+    round_fn = jax.jit(
+        lambda s, gd, hg, b: pf.client_round(loss_fn, s, gd, hg, b, pcfg)
+    )
+
+    for t in range(args.rounds):
+        t0 = time.perf_counter()
+        deltas, losses, betas = [], [], []
+        for i in range(args.clients):
+            bs = [next(iters[i]) for _ in range(args.local_iters)]
+            batches = jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+            states[i], delta, m = round_fn(states[i], global_delta, has_global, batches)
+            deltas.append(delta)
+            losses.append(float(m["loss"]))
+            betas.append(float(m["beta"]))
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
+        global_delta, has_global = pf.server_aggregate(stacked), jnp.asarray(True)
+        print(f"round {t:3d} loss={np.mean(losses):.4f} "
+              f"beta={np.mean(betas):.3f} ({time.perf_counter()-t0:.1f}s)")
+
+    assert np.isfinite(np.mean(losses))
+    print("OK: federated LM training ran end-to-end "
+          f"(final mean loss {np.mean(losses):.4f})")
+
+
+if __name__ == "__main__":
+    main()

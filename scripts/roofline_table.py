@@ -1,0 +1,93 @@
+"""Build the §Roofline markdown table from experiments/dryrun artifacts.
+
+Adds MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/dense-MoE waste).
+
+  PYTHONPATH=src python scripts/roofline_table.py [--mesh 16x16] [--md out.md]
+"""
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.launch.roofline import model_flops
+from repro.launch.steps import resolve_cfg
+
+ROOT = Path(__file__).resolve().parents[1] / "experiments"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh, variant="baseline", calibrated=False, art_dir=None):
+    art = Path(art_dir) if art_dir else (ROOT / ("roofline" if calibrated else "dryrun"))
+    rows = []
+    for arch in ARCH_NAMES:
+        for shape in SHAPE_ORDER:
+            tag = f"{arch}__{shape}__{mesh}"
+            if variant != "baseline":
+                tag += f"__{variant}"
+            f = art / f"{tag}.json"
+            if not f.exists():
+                continue
+            r = json.loads(f.read_text())
+            cfg = resolve_cfg(get_config(arch), INPUT_SHAPES[shape])
+            mf = model_flops(cfg, INPUT_SHAPES[shape])
+            rl = r["roofline"]
+            tot = r.get("total_flops", rl.get("total_flops", 0.0))
+            ratio = mf / tot if tot else 0.0
+            if "memory_analysis" in r:
+                hbm_gb = (r["memory_analysis"]["argument_size_in_bytes"]
+                          + r["memory_analysis"]["output_size_in_bytes"]
+                          + r["memory_analysis"]["temp_size_in_bytes"]) / 1e9
+            else:
+                hbm_gb = float("nan")
+            rows.append({
+                "arch": arch, "shape": shape, "mesh": mesh,
+                "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+                "model_flops": mf, "hlo_flops": tot,
+                "useful_ratio": ratio, "hbm_gb_per_dev": hbm_gb,
+                "compile_s": r.get("compile_s", r.get("calibrate_s")),
+            })
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--calibrated", action="store_true")
+    ap.add_argument("--art-dir", default=None)
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+
+    rows = load(args.mesh, args.variant, calibrated=args.calibrated,
+                art_dir=args.art_dir)
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL_FLOPS | HLO_FLOPs | useful | HBM GB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['dominant']} | "
+            f"{r['model_flops']:.3e} | {r['hlo_flops']:.3e} | "
+            f"{r['useful_ratio']:.2f} | {r['hbm_gb_per_dev']:.1f} |"
+        )
+    table = "\n".join(lines)
+    print(table)
+
+    # hillclimb-candidate ranking
+    print("\n-- candidates --")
+    tr = [r for r in rows if r["shape"] == "train_4k"]
+    worst = sorted(tr, key=lambda r: r["useful_ratio"])[:3]
+    coll = sorted(rows, key=lambda r: -r["collective_s"] /
+                  max(1e-12, max(r["compute_s"], r["memory_s"])))[:3]
+    print("worst useful ratio:", [(r["arch"], r["shape"], round(r["useful_ratio"], 2)) for r in worst])
+    print("most collective-bound:", [(r["arch"], r["shape"],
+          round(r["collective_s"] / max(r["compute_s"], r["memory_s"]), 2)) for r in coll])
+    if args.md:
+        Path(args.md).write_text(table + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""The paper's contribution (pFedSOP) + the baseline FL method zoo."""
+from repro.core import pfedsop  # noqa: F401
+from repro.core import baselines  # noqa: F401

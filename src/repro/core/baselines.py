@@ -1,0 +1,390 @@
+"""Baseline FL methods from the paper's comparison set (Table II).
+
+Every method implements the same traceable interface so the runtime in
+``repro.fl`` can vmap it over clients:
+
+  init_client(params)                        -> client_state (pytree)
+  init_server(params)                        -> broadcast (what the server sends)
+  client_round(loss_fn, state, broadcast, batches, cfg-like) ->
+        (new_state, upload, metrics)
+  server_update(broadcast, uploads_stacked)  -> new broadcast
+  eval_params(state, broadcast)              -> params used for local test acc
+
+Methods:  FedAvg, FedProx (mu), FedAvg-FT, FedProx-FT, Ditto (lam),
+FedRep (head/body split), LocalOnly, and the pFedSOP adapter around
+``repro.core.pfedsop``.  All local training is plain SGD (Algorithm 2 of
+the paper; same for the baselines, matching the paper's setup).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pfedsop as pf
+from repro.utils.pytree import tree_scale, tree_sub, tree_zeros_like
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Shared local-SGD machinery
+# ---------------------------------------------------------------------------
+
+
+def local_train(
+    loss_fn: Callable[[Pytree, Any], jnp.ndarray],
+    params: Pytree,
+    batches: Any,  # leading axis T
+    lr: float,
+    mask: Optional[Pytree] = None,
+    prox: Optional[tuple] = None,  # (mu, ref_params)
+):
+    """T SGD iterations; returns (final_params, mean_loss).
+
+    mask: 0/1 pytree freezing parameters (FedRep); prox: FedProx/Ditto
+    proximal term mu/2 ||x - ref||^2 added to the objective.
+    """
+
+    def full_loss(p, batch):
+        loss = loss_fn(p, batch)
+        if prox is not None:
+            mu, ref = prox
+            sq = pf.tree_sqnorm(tree_sub(p, ref))
+            loss = loss + 0.5 * mu * sq
+        return loss
+
+    grad_fn = jax.value_and_grad(full_loss)
+
+    def step(p, batch):
+        loss, g = grad_fn(p, batch)
+        if mask is not None:
+            g = jax.tree.map(lambda gi, m: gi * m, g, mask)
+        p = jax.tree.map(
+            lambda x, gi: (x.astype(jnp.float32) - lr * gi.astype(jnp.float32)).astype(x.dtype),
+            p,
+            g,
+        )
+        return p, loss
+
+    final, losses = jax.lax.scan(step, params, batches)
+    return final, jnp.mean(losses)
+
+
+# ---------------------------------------------------------------------------
+# Method classes
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FedAvg:
+    lr: float = 0.01
+    name: str = "fedavg"
+
+    def init_client(self, params):
+        return {}
+
+    def init_server(self, params):
+        return params
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        trained, loss = local_train(loss_fn, broadcast, batches, self.lr)
+        return state, trained, {"loss": loss}
+
+    def server_update(self, broadcast, uploads):
+        return jax.tree.map(lambda u: jnp.mean(u.astype(jnp.float32), 0).astype(u.dtype), uploads)
+
+    def eval_params(self, state, broadcast):
+        return broadcast
+
+
+@dataclass(frozen=True)
+class FedProx(FedAvg):
+    mu: float = 0.1
+    name: str = "fedprox"
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        trained, loss = local_train(
+            loss_fn, broadcast, batches, self.lr, prox=(self.mu, broadcast)
+        )
+        return state, trained, {"loss": loss}
+
+
+@dataclass(frozen=True)
+class FedAvgFT(FedAvg):
+    """FedAvg + per-round fine-tune: the personalized model is the global
+    model fine-tuned on local data BEFORE local training (paper Sec. V-B2);
+    the upload continues training from the fine-tuned point (O(2 N_i d))."""
+
+    name: str = "fedavg_ft"
+
+    def init_client(self, params):
+        return {"personal": params}
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        finetuned, loss_ft = local_train(loss_fn, broadcast, batches, self.lr)
+        trained, loss = local_train(loss_fn, finetuned, batches, self.lr)
+        return {"personal": finetuned}, trained, {"loss": 0.5 * (loss + loss_ft)}
+
+    def eval_params(self, state, broadcast):
+        return state["personal"]
+
+
+@dataclass(frozen=True)
+class FedProxFT(FedAvgFT):
+    mu: float = 0.1
+    name: str = "fedprox_ft"
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        finetuned, loss_ft = local_train(loss_fn, broadcast, batches, self.lr)
+        trained, loss = local_train(
+            loss_fn, finetuned, batches, self.lr, prox=(self.mu, broadcast)
+        )
+        return {"personal": finetuned}, trained, {"loss": 0.5 * (loss + loss_ft)}
+
+
+@dataclass(frozen=True)
+class Ditto(FedAvg):
+    """Ditto: global track = FedAvg; personal track trained with a proximal
+    pull toward the received global model (lam)."""
+
+    lam: float = 0.1
+    name: str = "ditto"
+
+    def init_client(self, params):
+        return {"personal": params}
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        trained, loss_g = local_train(loss_fn, broadcast, batches, self.lr)
+        personal, loss_p = local_train(
+            loss_fn, state["personal"], batches, self.lr, prox=(self.lam, broadcast)
+        )
+        return {"personal": personal}, trained, {"loss": loss_p}
+
+    def eval_params(self, state, broadcast):
+        return state["personal"]
+
+
+@dataclass(frozen=True)
+class FedRep(FedAvg):
+    """FedRep: aggregate the body (feature extractor); the head stays local.
+    head_predicate(path) -> True marks head leaves (e.g. the final fc)."""
+
+    head_predicate: Callable = None  # set at construction
+    name: str = "fedrep"
+
+    def _masks(self, params):
+        def is_head(path):
+            return self.head_predicate("/".join(str(k) for k in path))
+
+        head = jax.tree_util.tree_map_with_path(
+            lambda path, p: jnp.asarray(1.0 if is_head(path) else 0.0, jnp.float32), params
+        )
+        body = jax.tree.map(lambda m: 1.0 - m, head)
+        return head, body
+
+    def init_client(self, params):
+        return {"head": params}  # full tree; only head leaves are used
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        head_mask, body_mask = self._masks(broadcast)
+        # local model = broadcast body + stored head
+        params = jax.tree.map(
+            lambda b, h, m: jnp.where(m > 0, h, b), broadcast, state["head"], head_mask
+        )
+        params, _ = local_train(loss_fn, params, batches, self.lr, mask=head_mask)
+        params, loss = local_train(loss_fn, params, batches, self.lr, mask=body_mask)
+        return {"head": params}, params, {"loss": loss}
+
+    def server_update(self, broadcast, uploads):
+        # aggregate everything; the head rows are overwritten locally anyway
+        return jax.tree.map(lambda u: jnp.mean(u.astype(jnp.float32), 0).astype(u.dtype), uploads)
+
+    def eval_params(self, state, broadcast):
+        head_mask, _ = self._masks(broadcast)
+        return jax.tree.map(
+            lambda b, h, m: jnp.where(m > 0, h, b), broadcast, state["head"], head_mask
+        )
+
+
+@dataclass(frozen=True)
+class LocalOnly(FedAvg):
+    """No communication - each client trains alone (overfitting reference)."""
+
+    name: str = "local"
+
+    def init_client(self, params):
+        return {"personal": params}
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        personal, loss = local_train(loss_fn, state["personal"], batches, self.lr)
+        return {"personal": personal}, tree_zeros_like(broadcast), {"loss": loss}
+
+    def server_update(self, broadcast, uploads):
+        return broadcast  # nothing aggregated
+
+    def eval_params(self, state, broadcast):
+        return state["personal"]
+
+
+@dataclass(frozen=True)
+class PFedSOP:
+    """Adapter around repro.core.pfedsop for the runtime interface.
+
+    broadcast = (global_delta, has_global); upload = local delta;
+    client_state = pfedsop.ClientState.
+    """
+
+    cfg: pf.PFedSOPConfig = field(default_factory=pf.PFedSOPConfig)
+    name: str = "pfedsop"
+
+    def init_client(self, params):
+        return pf.init_client_state(params)
+
+    def init_server(self, params):
+        return {
+            "delta": tree_zeros_like(params),
+            "has_delta": jnp.asarray(False),
+        }
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        new_state, delta, metrics = pf.client_round(
+            loss_fn, state, broadcast["delta"], broadcast["has_delta"], batches, self.cfg
+        )
+        return new_state, delta, metrics
+
+    def server_update(self, broadcast, uploads):
+        return {
+            "delta": pf.server_aggregate(uploads),
+            "has_delta": jnp.asarray(True),
+        }
+
+    def eval_params(self, state, broadcast):
+        return state.params
+
+
+METHODS = {
+    "fedavg": FedAvg,
+    "fedprox": FedProx,
+    "fedavg_ft": FedAvgFT,
+    "fedprox_ft": FedProxFT,
+    "ditto": Ditto,
+    "fedrep": FedRep,
+    "local": LocalOnly,
+    "pfedsop": PFedSOP,
+}
+
+
+@dataclass(frozen=True)
+class Scaffold(FedAvg):
+    """SCAFFOLD (Karimireddy et al., 2020): control variates correct the
+    client drift.  Client keeps c_i; server broadcast carries (x, c).
+    Option II update of c_i (difference form), full-batch variant.
+
+    client:  y <- y - lr * (g(y) - c_i + c)         (T iterations)
+             c_i' = c_i - c + (x - y_T)/(T * lr)
+             upload (y_T, c_i' - c_i)
+    server:  x <- mean(y_T);  c <- c + mean(dc) * |S|/K  (we use |S|=K'
+             participating fraction folded into the mean, standard sim.)
+    """
+
+    name: str = "scaffold"
+
+    def init_client(self, params):
+        return {"c_i": tree_zeros_like(params)}
+
+    def init_server(self, params):
+        return {"x": params, "c": tree_zeros_like(params)}
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        x, c = broadcast["x"], broadcast["c"]
+        c_i = state["c_i"]
+        correction = jax.tree.map(
+            lambda ci, cg: (cg.astype(jnp.float32) - ci.astype(jnp.float32)),
+            c_i, c,
+        )
+        grad_fn = jax.value_and_grad(loss_fn)
+
+        def step(p, batch):
+            loss, g = grad_fn(p, batch)
+            p = jax.tree.map(
+                lambda w, gi, corr: (
+                    w.astype(jnp.float32) - self.lr * (gi.astype(jnp.float32) + corr)
+                ).astype(w.dtype),
+                p, g, correction,
+            )
+            return p, loss
+
+        final, losses = jax.lax.scan(step, x, batches)
+        t = batches_len(batches)
+        new_c_i = jax.tree.map(
+            lambda ci, cg, x0, xt: (
+                ci.astype(jnp.float32) - cg.astype(jnp.float32)
+                + (x0.astype(jnp.float32) - xt.astype(jnp.float32)) / (t * self.lr)
+            ).astype(ci.dtype),
+            c_i, c, x, final,
+        )
+        dc = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+                          new_c_i, c_i)
+        return {"c_i": new_c_i}, {"y": final, "dc": dc}, {"loss": jnp.mean(losses)}
+
+    def server_update(self, broadcast, uploads):
+        mean = lambda u: jax.tree.map(
+            lambda v: jnp.mean(v.astype(jnp.float32), 0), u)
+        new_x = jax.tree.map(
+            lambda old, m: m.astype(old.dtype), broadcast["x"], mean(uploads["y"]))
+        new_c = jax.tree.map(
+            lambda cg, m: (cg.astype(jnp.float32) + m).astype(cg.dtype),
+            broadcast["c"], mean(uploads["dc"]))
+        return {"x": new_x, "c": new_c}
+
+    def eval_params(self, state, broadcast):
+        return broadcast["x"]
+
+
+@dataclass(frozen=True)
+class FedExP(FedAvg):
+    """FedExP (Jhunjhunwala et al., ICLR 2023): server-side adaptive
+    extrapolation.  eta_server = max(1, ||mean delta||^2-based POCS step)
+
+        eta_g = max(1, sum_i ||d_i||^2 / (2 K' ||mean d||^2 + eps))
+        x <- x - eta_g * mean(d_i),  d_i = x - y_i
+    """
+
+    eps: float = 1e-3
+    name: str = "fedexp"
+
+    def client_round(self, loss_fn, state, broadcast, batches):
+        trained, loss = local_train(loss_fn, broadcast, batches, self.lr)
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            broadcast, trained,
+        )
+        return state, delta, {"loss": loss}
+
+    def server_update(self, broadcast, uploads):
+        mean_d = jax.tree.map(lambda v: jnp.mean(v, 0), uploads)
+        from repro.utils.pytree import tree_sqnorm
+
+        per_client_sq = jax.vmap(lambda i: tree_sqnorm(
+            jax.tree.map(lambda v: v[i], uploads)))(
+                jnp.arange(jax.tree.leaves(uploads)[0].shape[0]))
+        kprime = jax.tree.leaves(uploads)[0].shape[0]
+        mean_sq = tree_sqnorm(mean_d)
+        eta_g = jnp.maximum(1.0, jnp.sum(per_client_sq) /
+                            (2.0 * kprime * (mean_sq + self.eps)))
+        return jax.tree.map(
+            lambda x, d: (x.astype(jnp.float32) - eta_g * d).astype(x.dtype),
+            broadcast, mean_d,
+        )
+
+
+def batches_len(batches):
+    """Static length T of the leading scan axis of a batch pytree."""
+    return jax.tree.leaves(batches)[0].shape[0]
+
+
+METHODS["scaffold"] = Scaffold
+METHODS["fedexp"] = FedExP

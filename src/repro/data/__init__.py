@@ -1,0 +1,5 @@
+"""Federated data substrate: synthetic generators + the paper's partitioners."""
+from repro.data.synthetic import make_class_conditional_images  # noqa: F401
+from repro.data.partition import dirichlet_partition, pathological_partition  # noqa: F401
+from repro.data.federated import FederatedData  # noqa: F401
+from repro.data.lm import synthetic_lm_stream, lm_batch_iterator  # noqa: F401

@@ -1,0 +1,2 @@
+"""FL runtime: vmap'd single-host simulation + distributed round logic."""
+from repro.fl.runtime import Federation, FLRunConfig  # noqa: F401

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each subpackage: ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
+tiling, TPU target), ``ops.py`` (jit'd public wrapper with an
+``interpret=`` switch so CPU CI validates the kernel body), ``ref.py``
+(pure-jnp oracle the tests assert against).
+
+  pfedsop_update  fused pFedSOP round-start: 3 dot-product reductions +
+                  Gompertz + Sherman-Morrison rescale + parameter AXPY in
+                  two HBM sweeps instead of five.
+  flash_gqa       blockwise online-softmax GQA attention with sliding
+                  window + logit softcap (gemma2/3 local-global stacks).
+  rmsnorm         fused mean-square reduction + scale.
+"""

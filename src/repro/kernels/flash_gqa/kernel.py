@@ -1,0 +1,121 @@
+"""Blockwise online-softmax GQA attention - Pallas TPU kernel.
+
+The canonical flash-attention tiling adapted for the assigned archs:
+
+  grid = (B * H, S/BQ, S/BK)   - the KV block index is the INNERMOST grid
+  dimension; TPU executes the grid sequentially per core, so the running
+  (m, l, acc) online-softmax state lives in VMEM scratch and persists
+  across the KV iterations of one (batch-head, q-block) pair.
+
+  q tile   (BQ, D)  VMEM     k/v tiles (BK, D) VMEM
+  scratch: m (BQ,1) l (BQ,1) acc (BQ, D) - all f32.
+
+GQA: query head h reads KV head h // (H/KV) via the k/v BlockSpec index
+maps - no KV replication in HBM.  Sliding window + causality are enforced
+element-wise inside each tile via broadcasted iota; fully-masked tiles
+contribute exp(-inf) = 0 (the ops.py wrapper documents the block-pruning
+hillclimb that skips them outright).
+
+Softcap (gemma2) is applied to the scaled scores before masking, matching
+repro/models/attention.py.
+
+D (head_dim) is 64..256 for all assigned archs - lane-aligned; BQ/BK are
+multiples of 8 (sublane).  VMEM budget at BQ=BK=512, D=256, f32:
+q 512x256x4 = 512 KiB, k+v 1 MiB, acc 512 KiB - comfortably inside 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, window, softcap, bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
+    s = q @ k.T  # (BQ, BK)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (BQ, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # rows with no valid key yet keep m=NEG_INF; clamp so alpha stays finite
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    p = jnp.exp(s - m_new)  # masked entries: exp(NEG_INF - m) = 0
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + p @ v_ref[0, 0].astype(jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_gqa_pallas(q, k, v, window=None, softcap=None, scale=None,
+                     bq: int = 512, bk: int = 512, interpret: bool = False):
+    """q: (B,H,S,D), k/v: (B,KV,S,D) -> (B,H,S,D).  Causal GQA."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0
+    g = h // kv
+    sc = scale if scale is not None else d**-0.5
+
+    bq = min(bq, s)
+    while s % bq:
+        bq //= 2
+    bk = min(bk, s)
+    while s % bk:
+        bk //= 2
+    nq, nk = s // bq, s // bk
+
+    qf = q.reshape(b * h, s, d)
+    grid = (b * h, nq, nk)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=sc, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            # GQA: map the flattened batch-head index to (batch, kv head)
+            pl.BlockSpec((1, 1, bk, d), lambda bh, qi, ki: (bh // h, (bh % h) // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bh, qi, ki: (bh // h, (bh % h) // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, k, v)
+    return out.reshape(b, h, s, d)

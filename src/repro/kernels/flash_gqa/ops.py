@@ -1,0 +1,34 @@
+"""Public jit'd wrapper for flash_gqa.
+
+Accepts the model-layer layout (B, S, H, D) and transposes to the kernel's
+(B, H, S, D).  ``interpret=True`` runs the kernel body in Python on CPU
+(the CI validation path); on TPU the same call lowers to Mosaic.
+
+Block-pruning note (hillclimb lever, EXPERIMENTS.md §Perf): with a sliding
+window W << S, most (q_block, k_block) grid steps are fully masked.  The
+kernel still visits them (grid shape is static); the pruned variant reduces
+nk to ceil((W + BQ)/BK) + 1 blocks per q row by shifting the k index map -
+added during the perf pass (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_gqa.kernel import flash_gqa_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "bq", "bk", "interpret")
+)
+def flash_gqa(q, k, v, window=None, softcap=None, scale=None,
+              bq: int = 512, bk: int = 512, interpret: bool = False):
+    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D).  Causal GQA attention."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_gqa_pallas(qt, kt, vt, window=window, softcap=softcap,
+                           scale=scale, bq=bq, bk=bk, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash_gqa: causal GQA attention with optional
+sliding window and logit softcap.  Materialises the full score matrix -
+only usable at test sizes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_gqa_ref(q, k, v, window=None, softcap=None, scale=None):
+    """q: (B,H,S,D), k/v: (B,KV,S,D) -> (B,H,S,D).  Causal."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    sc = scale if scale is not None else d**-0.5
+    qg = q.reshape(b, kv, g, s, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgqd,bktd->bkgqt", qg, k.astype(jnp.float32)) * sc
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki <= qi
+    if window is not None:
+        mask &= (qi - ki) < window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(b, h, s, d).astype(q.dtype)

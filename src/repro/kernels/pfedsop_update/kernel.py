@@ -1,0 +1,90 @@
+"""Fused pFedSOP round-start update - Pallas TPU kernels.
+
+The paper's per-round client step (Algorithm 1) is five elementwise/
+reduction sweeps over the d-parameter vectors if done naively:
+
+  3 reductions (dot, ||d_i||^2, ||d_g||^2)  ->  beta (Gompertz)
+  1 reduction  (||dp||^2)                   ->  Sherman-Morrison coeff
+  2 elementwise (dp = lerp, x -= eta*coeff*dp)
+
+Observation (DESIGN.md §4): ||dp||^2 = (1-b)^2||d_i||^2 + 2b(1-b)<d_i,d_g>
++ b^2||d_g||^2 - a quadratic form of the SAME three scalars, so no fourth
+sweep is needed.  The kernel pair does:
+
+  phase 1 (reduce):  one pass over (d_i, d_g) tiles accumulating the three
+                     dot products in f32; per-tile partials are written out
+                     and summed by XLA (tiny).
+  phase 2 (update):  one pass computing x - eta*coeff*((1-b) d_i + b d_g)
+                     with (beta, eta*coeff) as scalar operands.
+
+=> 2 HBM sweeps instead of 5.  At d ~ 9B params (gemma2-9b) this is the
+difference between ~108 GB and ~270 GB of HBM traffic per round start.
+
+Tiles are (ROWS, 128) f32/bf16, lane-aligned; callers pad the flat vector
+to a tile multiple (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _reduce_kernel(di_ref, dg_ref, out_ref):
+    di = di_ref[...].astype(jnp.float32)
+    dg = dg_ref[...].astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(di * dg)
+    out_ref[0, 1] = jnp.sum(di * di)
+    out_ref[0, 2] = jnp.sum(dg * dg)
+
+
+def reduce3_pallas(di2d, dg2d, block_rows: int = 512, interpret: bool = False):
+    """di2d/dg2d: (M, 128) -> per-tile partials (n_tiles, 3) f32."""
+    m, lanes = di2d.shape
+    rows = min(block_rows, m)
+    while m % rows:
+        rows //= 2
+    grid = (m // rows,)
+    return pl.pallas_call(
+        _reduce_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 3), jnp.float32),
+        interpret=interpret,
+    )(di2d, dg2d)
+
+
+def _update_kernel(beta_ref, etacoeff_ref, x_ref, di_ref, dg_ref, o_ref):
+    beta = beta_ref[0, 0]
+    ec = etacoeff_ref[0, 0]
+    di = di_ref[...].astype(jnp.float32)
+    dg = dg_ref[...].astype(jnp.float32)
+    dp = (1.0 - beta) * di + beta * dg
+    o_ref[...] = (x_ref[...].astype(jnp.float32) - ec * dp).astype(o_ref.dtype)
+
+
+def update_pallas(x2d, di2d, dg2d, beta, eta_coeff, block_rows: int = 512,
+                  interpret: bool = False):
+    """x_new = x - eta_coeff * ((1-beta) d_i + beta d_g), tiled."""
+    m, lanes = x2d.shape
+    rows = min(block_rows, m)
+    while m % rows:
+        rows //= 2
+    grid = (m // rows,)
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    tile = pl.BlockSpec((rows, lanes), lambda i: (i, 0))
+    const = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        _update_kernel,
+        grid=grid,
+        in_specs=[const, const, tile, tile, tile],
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((m, lanes), x2d.dtype),
+        interpret=interpret,
+    )(scal(beta), scal(eta_coeff), x2d, di2d, dg2d)

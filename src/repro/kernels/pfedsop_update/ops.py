@@ -1,0 +1,57 @@
+"""Public wrapper: fused pFedSOP round-start update.
+
+``pfedsop_update(x, delta_i, delta_g, ...)`` takes flat parameter vectors
+(any float dtype), pads to (rows, 128) tiles, runs the two-phase kernel and
+returns (x_new, beta).  ``pfedsop_update_tree`` is the pytree convenience
+used by launch/steps.py when the kernel path is enabled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pfedsop_update.kernel import reduce3_pallas, update_pallas
+from repro.kernels.pfedsop_update.ref import gompertz_beta
+from repro.utils.pytree import tree_flatten_to_vector, tree_unflatten_from_vector
+
+LANES = 128
+
+
+def _pad2d(v):
+    n = v.shape[0]
+    m = -(-n // LANES)  # ceil division -> rows
+    pad = m * LANES - n
+    return jnp.pad(v, (0, pad)).reshape(m, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pfedsop_update(x, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,
+                   eps=1e-12, interpret: bool = False):
+    """Flat-vector fused update.  Returns (x_new (N,), beta scalar f32)."""
+    di2d, n = _pad2d(delta_i)
+    dg2d, _ = _pad2d(delta_g)
+    x2d, _ = _pad2d(x)
+
+    partials = reduce3_pallas(di2d, dg2d, interpret=interpret)  # (tiles, 3)
+    sums = jnp.sum(partials, axis=0)
+    dot, nl2, ng2 = sums[0], sums[1], sums[2]
+
+    beta = gompertz_beta(dot, nl2, ng2, lam, eps)
+    sq = (1.0 - beta) ** 2 * nl2 + 2.0 * beta * (1.0 - beta) * dot + beta**2 * ng2
+    coeff = 1.0 / rho - sq / (rho**2 + rho * sq)
+
+    out2d = update_pallas(x2d, di2d, dg2d, beta, eta1 * coeff, interpret=interpret)
+    return out2d.reshape(-1)[:n], beta
+
+
+def pfedsop_update_tree(params, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,
+                        interpret: bool = False):
+    """Pytree convenience wrapper (flatten -> kernel -> unflatten)."""
+    xv = tree_flatten_to_vector(params)
+    div = tree_flatten_to_vector(delta_i)
+    dgv = tree_flatten_to_vector(delta_g)
+    new_v, beta = pfedsop_update(xv, div, dgv, eta1=eta1, rho=rho, lam=lam,
+                                 interpret=interpret)
+    return tree_unflatten_from_vector(new_v, params), beta

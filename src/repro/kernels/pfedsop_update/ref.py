@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the fused pFedSOP round-start update (flat vectors)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gompertz_beta(dot, nl2, ng2, lam, eps=1e-12):
+    denom = jnp.sqrt(nl2) * jnp.sqrt(ng2)
+    ok = denom > eps
+    sim = jnp.where(ok, dot / jnp.where(ok, denom, 1.0), 0.0)
+    sim = jnp.clip(sim, -1.0, 1.0)
+    theta = jnp.arccos(sim)
+    return 1.0 - jnp.exp(-jnp.exp(-lam * (theta - 1.0)))
+
+
+def pfedsop_update_ref(x, delta_i, delta_g, eta1, rho, lam, eps=1e-12):
+    """Returns (x_new, beta).  x/delta_i/delta_g: (N,) any float dtype.
+
+    Mirrors Algorithm 1: beta from the Gompertz-normalised angle, dp the
+    personalized aggregation, Sherman-Morrison rescale, model AXPY.  The
+    key identity the kernel exploits: ||dp||^2 is a quadratic form of the
+    same three reductions (dot, ||d_i||^2, ||d_g||^2) - no extra sweep.
+    """
+    di = delta_i.astype(jnp.float32)
+    dg = delta_g.astype(jnp.float32)
+    dot = jnp.sum(di * dg)
+    nl2 = jnp.sum(di * di)
+    ng2 = jnp.sum(dg * dg)
+    beta = gompertz_beta(dot, nl2, ng2, lam, eps)
+    dp = (1.0 - beta) * di + beta * dg
+    sq = (1.0 - beta) ** 2 * nl2 + 2.0 * beta * (1.0 - beta) * dot + beta**2 * ng2
+    coeff = 1.0 / rho - sq / (rho**2 + rho * sq)
+    x_new = (x.astype(jnp.float32) - eta1 * coeff * dp).astype(x.dtype)
+    return x_new, beta

@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the rmsnorm kernel (arbitrary leading dims)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = False):
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    out = rmsnorm_pallas(flat, scale, eps=eps, interpret=interpret)
+    return out.reshape(*lead, d)

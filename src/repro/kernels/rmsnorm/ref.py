@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the rmsnorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    """x: (..., D); scale: (D,).  (1+scale) parametrisation, f32 reduce."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh, sharding rules, step definitions,
+multi-pod dry-run, roofline analysis, and the train/serve drivers."""

@@ -1,0 +1,34 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16); the ``pod``
+axis is the FL-cohort axis - each pod runs one client's local phase, and
+the only cross-pod collective is the round-boundary all-reduce of the
+local gradient updates (DESIGN.md §3).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before any jax initialisation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} - run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 (see dryrun.py)"
+        )
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for CPU smoke runs of the sharded step code."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -1,0 +1,144 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms, per (arch x shape x mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs            / (chips x 197e12 FLOP/s bf16)
+  memory     = HLO_bytes_accessed   / (chips x 819e9  B/s HBM)
+  collective = collective_bytes     / (chips x 50e9   B/s per ICI link)
+
+``cost_analysis()`` on a partitioned executable reports the PER-DEVICE
+module cost, so chips divides out of the first two terms - we multiply
+back to totals for reporting and divide again for seconds (documented in
+EXPERIMENTS.md §Roofline).  Collective bytes are NOT in cost_analysis:
+``collective_bytes_from_hlo`` parses the post-SPMD optimized HLO text and
+sums operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (per-device traffic).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[4,128]{1,0} all-reduce(...)
+#       ROOT %r = (f32[2]{0}, f32[]) all-to-all(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Census of collective ops in post-SPMD HLO: {op: {bytes, count}}.
+
+    Bytes = the op's RESULT shape(s) (per-device).  ``-start`` variants are
+    counted, ``-done`` skipped (same payload, avoids double count).
+    """
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        eq = line.find(" = ")
+        if eq < 0:
+            continue
+        rhs = line[eq + 3:]
+        for op in _COLLECTIVES:
+            # match "op(" or "op-start(" at the op-name position
+            m = re.search(rf"\b{op}(?:-start)?\(", rhs)
+            if not m:
+                continue
+            if f"{op}-done" in rhs:
+                continue
+            nbytes = _shape_bytes(rhs[: m.start()])
+            d = out.setdefault(op, {"bytes": 0.0, "count": 0})
+            d["bytes"] += nbytes
+            d["count"] += 1
+            break
+    return out
+
+
+def roofline_terms(record: dict, n_devices: int) -> dict:
+    """Seconds per term + dominant bottleneck, from a dry-run record."""
+    cost = record.get("cost_analysis", {})
+    flops_dev = float(cost.get("flops", 0.0))  # per-device (post-SPMD module)
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = sum(v["bytes"] for v in record.get("collectives", {}).values())
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    return {
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "total_flops": flops_dev * n_devices,
+        "total_bytes": bytes_dev * n_devices,
+        "collective_bytes_per_device": coll_dev,
+    }
+
+
+def model_flops(cfg, shape, n_tokens: int = None) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for the step's tokens.
+
+    N counted from the config analytically (embedding excluded, matching
+    the convention); D = tokens processed by the step.
+    """
+    n_active = active_param_count(cfg)
+    if n_tokens is None:
+        if shape.kind == "train":
+            n_tokens = shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            n_tokens = shape.global_batch * shape.seq_len
+        else:
+            n_tokens = shape.global_batch  # one new token per sequence
+    mult = 6 if shape.kind == "train" else 2  # fwd+bwd vs fwd
+    return float(mult * n_active * n_tokens)
+
+
+def active_param_count(cfg) -> float:
+    """Analytic non-embedding active-parameter count for the config."""
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    per_layer = {}
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    mlp = 3 * d * cfg.d_ff if cfg.d_ff else 0
+    moe_active = 3 * d * cfg.expert_ff * cfg.top_k + d * cfg.n_experts if cfg.n_experts else 0
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_expand * d
+        nh = d_inner // cfg.ssm_head_dim
+        z = 2 * d_inner + 2 * cfg.ssm_state + nh
+        ssm = d * z + d_inner * d
+    else:
+        ssm = 0
+    total = 0.0
+    for spec in cfg.layers:
+        if spec.kind == "ssm":
+            total += ssm
+        elif spec.kind == "moe":
+            total += attn + moe_active
+        else:
+            total += attn + mlp
+    return total

@@ -1,0 +1,217 @@
+"""Step definitions lowered by the dry-run and executed by the drivers.
+
+The pFedSOP production round-step (the paper's Algorithm 3, one client
+cohort per pod) is:
+
+  per client (vmapped over the leading client axis; multi-pod shards it
+  over ``pod``):
+    1. personalize: Gompertz-weighted aggregation of (local delta, global
+       delta) + Sherman-Morrison FIM step    (Algorithm 1 - the paper)
+    2. T local SGD iterations over the round's microbatches (Algorithm 2);
+       one scan step per microbatch, so activation memory is bounded by a
+       single microbatch while the FLOPs match the full global batch
+    3. new local delta = (x0 - xT)/eta2
+  server:
+    4. global delta = mean over the client axis (Eq. 13) - this mean IS
+       the cross-pod all-reduce in the lowered HLO.
+
+Serving:
+  prefill_step  full forward, last-position logits (cache write-out is
+                elided in the dry-run; DESIGN.md §8)
+  serve_step    one new token against a KV cache of seq_len (decode
+                shapes); greedy sampling.
+
+``input_specs(cfg, shape)`` builds ShapeDtypeStruct stand-ins for every
+input - weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import pfedsop as pf
+from repro.models import transformer as tf
+from repro.models.transformer import apply_long_context
+
+MICRO_BATCH = 32  # per-SGD-iteration batch for train_4k (T = 256/32 = 8)
+
+
+def resolve_cfg(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if shape.name == "long_500k":
+        return apply_long_context(cfg)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input builders
+# ---------------------------------------------------------------------------
+
+
+def _token_batch(cfg, b, s):
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_codebooks":
+        return {"tokens": sds((b, cfg.n_codebooks, s), i32),
+                "labels": sds((b, cfg.n_codebooks, s), i32)}
+    if cfg.frontend == "vision_stub":
+        s_text = s - cfg.n_patches
+        return {
+            "tokens": sds((b, s_text), i32),
+            "labels": sds((b, s_text), i32),
+            "patch_embeds": sds((b, cfg.n_patches, cfg.d_vision), jnp.float32),
+        }
+    return {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+
+
+def _decode_batch(cfg, b):
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if cfg.frontend == "audio_codebooks":
+        return {"tokens": sds((b, cfg.n_codebooks, 1), i32)}
+    if cfg.frontend == "vision_stub":
+        return {"tokens": sds((b, 1), i32),
+                "patch_embeds": sds((b, 0, cfg.d_vision), jnp.float32)}
+    return {"tokens": sds((b, 1), i32)}
+
+
+def abstract_params(cfg) -> Any:
+    return jax.eval_shape(lambda k: tf.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_caches(cfg, batch, seq_len) -> Any:
+    return jax.eval_shape(lambda: tf.init_caches(cfg, batch, seq_len))
+
+
+def _stack_client(tree, n_clients):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_clients,) + tuple(l.shape), l.dtype), tree
+    )
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, n_clients: int = 1,
+                micro_batch: int = MICRO_BATCH,
+                t_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of (arch x shape).
+
+    ``t_override`` pins the local-SGD iteration count (the roofline
+    calibration lowers T=1 so every loop has a single trip).
+    """
+    cfg = resolve_cfg(cfg, shape)
+    params = abstract_params(cfg)
+
+    if shape.kind == "train":
+        mb = min(micro_batch, shape.global_batch)
+        t = t_override or max(1, shape.global_batch // mb)
+        batches = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((t,) + tuple(l.shape), l.dtype),
+            _token_batch(cfg, mb, shape.seq_len),
+        )
+        state = {"params": params, "delta": params}
+        return {
+            "state": _stack_client(state, n_clients),
+            "global_delta": params,  # replicated broadcast from the server
+            "batches": _stack_client(batches, n_clients),
+        }
+
+    if shape.kind == "prefill":
+        return {
+            "params": _stack_client(params, n_clients),
+            "batch": _stack_client(_token_batch(cfg, shape.global_batch, shape.seq_len), n_clients),
+        }
+
+    # decode
+    caches = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+    return {
+        "params": _stack_client(params, n_clients),
+        "batch": _stack_client(_decode_batch(cfg, shape.global_batch), n_clients),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "caches": _stack_client(caches, n_clients),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, shape: InputShape,
+                    pcfg: Optional[pf.PFedSOPConfig] = None,
+                    use_pfedsop: bool = True):
+    """Returns train_step(state, global_delta, batches) -> (state', gd', loss).
+
+    state/batches carry a leading client axis (size = #pods, 1 on the
+    single-pod mesh).  ``use_pfedsop=False`` gives the plain-FedAvg round
+    (the paper-baseline lowering used for the roofline delta of the
+    technique itself).
+    """
+    cfg = resolve_cfg(cfg, shape)
+    pcfg = pcfg or pf.PFedSOPConfig()
+
+    def loss_fn(p, batch):
+        return tf.lm_loss(p, cfg, batch)
+
+    def client_step(state, global_delta, batches):
+        params = state["params"]
+        if use_pfedsop:
+            params, _ = pf.personalize(params, state["delta"], global_delta, pcfg)
+
+        def sgd_iter(p, batch):
+            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            p = jax.tree.map(
+                lambda x, gi: (x.astype(jnp.float32) - pcfg.eta2 * gi.astype(jnp.float32)).astype(x.dtype),
+                p, g,
+            )
+            return p, loss
+
+        final, losses = jax.lax.scan(sgd_iter, params, batches)
+        delta = jax.tree.map(
+            lambda a, b: ((a.astype(jnp.float32) - b.astype(jnp.float32)) / pcfg.eta2).astype(a.dtype),
+            params, final,
+        )
+        return {"params": final, "delta": delta}, jnp.mean(losses)
+
+    def train_step(state, global_delta, batches):
+        new_state, losses = jax.vmap(client_step, in_axes=(0, None, 0))(
+            state, global_delta, batches
+        )
+        # Eq. 13 server aggregation == the cross-pod all-reduce
+        new_global = jax.tree.map(
+            lambda d: jnp.mean(d.astype(jnp.float32), axis=0).astype(d.dtype),
+            new_state["delta"],
+        )
+        return new_state, new_global, jnp.mean(losses)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: InputShape):
+    cfg = resolve_cfg(cfg, shape)
+
+    def prefill_one(params, batch):
+        hidden, _ = tf.forward(params, cfg, batch)
+        logits = tf.lm_logits(params, cfg, hidden[:, -1:, :])
+        return logits
+
+    def prefill_step(params, batch):
+        return jax.vmap(prefill_one)(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, shape: InputShape):
+    cfg = resolve_cfg(cfg, shape)
+
+    def decode_one(params, batch, pos, caches):
+        logits, new_caches = tf.decode_step(params, cfg, batch, pos, caches)
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return token, new_caches
+
+    def serve_step(params, batch, pos, caches):
+        return jax.vmap(decode_one, in_axes=(0, 0, None, 0))(params, batch, pos, caches)
+
+    return serve_step

@@ -1,0 +1,2 @@
+"""Model zoo: unified decoder stack (all assigned archs) + ResNet CNN."""
+from repro.models import transformer, cnn  # noqa: F401

@@ -1,0 +1,216 @@
+"""GQA attention: blockwise (flash-style) training/prefill path and a
+single-token decode path with ring-buffer KV caches.
+
+Supports: grouped-query heads, sliding windows, logit softcapping, optional
+QK-norm, per-layer RoPE bases.  The blockwise scan keeps the materialised
+score tensor at (B, q_block, H, S) instead of (B, S, H, S), which is what
+makes 32k prefill fit in HBM; the Pallas kernel in repro/kernels/flash_gqa
+is the TPU-tiled version of the same computation (tested against
+repro/kernels/flash_gqa/ref.py which mirrors this math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rmsnorm_init, rmsnorm, rope, softcap
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, h, hd), d, dtype),
+        "wk": dense_init(k2, (d, kv, hd), d, dtype),
+        "wv": dense_init(k3, (d, kv, hd), d, dtype),
+        "wo": dense_init(k4, (h, hd, d), h * hd, dtype, scale=1.0 / np.sqrt(2 * max(1, cfg.n_layers))),
+    }
+    if cfg.use_qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, rope_base):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, rope_base)
+    k = rope(k, positions, rope_base)
+    return q, k, v
+
+
+def _grouped_scores(q, k, cfg):
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> scores (B,Sq,KV,G,Sk) in f32.
+
+    Operands stay in their storage dtype (bf16) with f32 ACCUMULATION via
+    preferred_element_type - the MXU-native mode.  An explicit .astype(f32)
+    here would materialise an f32 copy of the whole KV cache in HBM
+    (measured +12.8 GB/device at gemma2-9b decode_32k; EXPERIMENTS.md
+    §Perf iteration 1).
+    """
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bqkgd,btkd->bqkgt", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s * (hd**-0.5)
+    if cfg.attn_softcap is not None:
+        s = softcap(s, cfg.attn_softcap)
+    return s
+
+
+def attention_fwd(p, cfg, x, positions, window, rope_base, q_block=512):
+    """Training / prefill self-attention (causal, optional sliding window).
+
+    x: (B,S,D) already layer-normed;  positions: (B,S) int32.
+    Scans over query blocks to bound live memory.
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(p, cfg, x, positions, rope_base)
+
+    qb = min(q_block, s)
+    while s % qb:
+        qb //= 2
+    nb = s // qb
+
+    # (nb, B, qb, H, hd) query blocks; keys/values stay whole.
+    q_blocks = jnp.moveaxis(q.reshape(b, nb, qb, h, hd), 1, 0)
+    pos_blocks = jnp.moveaxis(positions.reshape(b, nb, qb), 1, 0)
+    kpos = positions  # (B,S)
+
+    def block(carry, inp):
+        qi, qpos = inp  # (B,qb,H,hd), (B,qb)
+        sc = _grouped_scores(qi, k, cfg)  # (B,qb,KV,G,S)
+        mask = kpos[:, None, :] <= qpos[:, :, None]  # causal (B,qb,S)
+        if window is not None:
+            mask &= (qpos[:, :, None] - kpos[:, None, :]) < window
+        sc = jnp.where(mask[:, :, None, None, :], sc, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1)
+        g = h // kv
+        # probabilities cast to the storage dtype for the PV matmul
+        # (standard flash practice); accumulation stays f32 on the MXU
+        o = jnp.einsum("bqkgt,btkd->bqkgd", w.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return carry, o.reshape(b, qb, h, hd).astype(x.dtype)
+
+    _, o_blocks = jax.lax.scan(block, None, (q_blocks, pos_blocks))
+    o = jnp.moveaxis(o_blocks, 0, 1).reshape(b, s, h, hd)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, capacity, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if cfg.kv_quant:
+        # int8 symmetric per-(token, kv-head) quantisation: halves cache
+        # HBM vs bf16 (the musicgen-large decode_32k cache is 1.6 TB)
+        return {
+            "k": jnp.zeros((batch, capacity, kv, hd), jnp.int8),
+            "v": jnp.zeros((batch, capacity, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((batch, capacity, kv), jnp.bfloat16),
+            "v_scale": jnp.zeros((batch, capacity, kv), jnp.bfloat16),
+            "pos": jnp.full((capacity,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, capacity, kv, hd), dtype),
+        "v": jnp.zeros((batch, capacity, kv, hd), dtype),
+        "pos": jnp.full((capacity,), -1, jnp.int32),  # absolute position per slot
+    }
+
+
+def _quantize(x):
+    """x: (..., hd) -> (int8 values, bf16 scale over the last dim)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def attention_decode(p, cfg, x, pos, cache, window, rope_base):
+    """Decode one token.
+
+    x: (B,1,D) normed hidden;  pos: scalar int32 absolute position;
+    cache: ring buffer dict (capacity W for windowed layers, seq_len for full).
+    Returns (out (B,1,D), new_cache).
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope_base)
+
+    cap = cache["k"].shape[1]
+    slot = pos % cap
+    slot_pos = jax.lax.dynamic_update_slice(cache["pos"], pos[None].astype(jnp.int32), (slot,))
+    if "k_scale" in cache:  # int8 cache: quantise the new token on write
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        kc = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        kss = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        vss = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        new_cache = {"k": kc, "v": vc, "k_scale": kss, "v_scale": vss, "pos": slot_pos}
+        # dequantised views feed the score/PV einsums; the convert+scale
+        # fuses into the dot's operand fetch (no materialised copy)
+        k = kc.astype(x.dtype) * kss[..., None].astype(x.dtype)
+        v = vc.astype(x.dtype) * vss[..., None].astype(x.dtype)
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+        new_cache = {"k": k, "v": v, "pos": slot_pos}
+
+    sc = _grouped_scores(q, k, cfg)  # (B,1,KV,G,cap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bqkgt,btkd->bqkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, h, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), new_cache
+
+
+def pack_prefill_cache(cfg, k, v, positions, capacity, dtype):
+    """Turn full-sequence post-RoPE k/v (B,S,KV,hd) into the ring-buffer
+    cache decode expects: slot(p) = p % capacity, keeping the last
+    ``capacity`` positions (all of them when capacity == S)."""
+    b, s = k.shape[0], k.shape[1]
+    cap = capacity or s  # allocated capacity (>= s for full-attention layers
+    #                      so later decode positions don't wrap onto the prompt)
+    take = min(cap, s)
+    last_pos = positions[0, -take:]  # (take,) absolute positions
+    slots = last_pos % cap
+    kk, vv = k[:, -take:], v[:, -take:]
+    if cfg.kv_quant:
+        kq, ks = _quantize(kk)
+        vq, vs = _quantize(vv)
+        cache = {
+            "k": jnp.zeros((b, cap, cfg.n_kv_heads, cfg.head_dim), jnp.int8
+                           ).at[:, slots].set(kq),
+            "v": jnp.zeros((b, cap, cfg.n_kv_heads, cfg.head_dim), jnp.int8
+                           ).at[:, slots].set(vq),
+            "k_scale": jnp.zeros((b, cap, cfg.n_kv_heads), jnp.bfloat16
+                                 ).at[:, slots].set(ks),
+            "v_scale": jnp.zeros((b, cap, cfg.n_kv_heads), jnp.bfloat16
+                                 ).at[:, slots].set(vs),
+            "pos": jnp.full((cap,), -1, jnp.int32).at[slots].set(last_pos.astype(jnp.int32)),
+        }
+        return cache
+    return {
+        "k": jnp.zeros((b, cap, cfg.n_kv_heads, cfg.head_dim), dtype).at[:, slots].set(kk.astype(dtype)),
+        "v": jnp.zeros((b, cap, cfg.n_kv_heads, cfg.head_dim), dtype).at[:, slots].set(vv.astype(dtype)),
+        "pos": jnp.full((cap,), -1, jnp.int32).at[slots].set(last_pos.astype(jnp.int32)),
+    }

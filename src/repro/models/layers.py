@@ -1,0 +1,93 @@
+"""Shared neural-net building blocks (pure JAX, no flax).
+
+Parameters are plain nested dicts of jnp arrays.  Initialisers take an
+explicit PRNG key.  All blocks are written to be shardable under pjit: no
+data-dependent shapes, reductions in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, in_axis_size, dtype, scale=1.0):
+    """Variance-scaling (fan-in) normal init."""
+    std = scale / np.sqrt(max(1, in_axis_size))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) parametrisation
+
+
+def rmsnorm(p, x, eps=1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dtype)
+
+
+def rmsnorm_noscale(x, eps=1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, base):
+    """Apply rotary embeddings.
+
+    x: (..., S, H, hd) with hd even; positions: (..., S) int32.
+    """
+    hd = x.shape[-1]
+    assert hd % 2 == 0, "head_dim must be even for RoPE"
+    half = hd // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # angles: (..., S, half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model, d_ff, n_layers, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, (d_model, d_ff), d_model, dtype),
+        "wi_up": dense_init(k2, (d_model, d_ff), d_model, dtype),
+        "wo": dense_init(k3, (d_ff, d_model), d_ff, dtype, scale=1.0 / np.sqrt(2 * max(1, n_layers))),
+    }
+
+
+def mlp(p, x, activation="silu"):
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    g = act(x @ p["wi_gate"])
+    u = x @ p["wi_up"]
+    return (g * u) @ p["wo"]
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,200 @@
+"""Mixture-of-experts FFN block (OLMoE / granite-MoE style).
+
+Two interchangeable implementations, selected by ``impl``:
+
+``dense``    - every expert processes every token; router weights zero out the
+               non-selected experts.  Compute-wasteful by a factor E/k but
+               trivially shardable (experts on the `model` axis) and has no
+               load-balance pathologies.  This is the BASELINE the roofline
+               table exposes (MODEL_FLOPS/HLO_FLOPs ratio collapses).
+``dispatch`` - capacity-based dispatch: tokens are scattered into an
+               (E, capacity, D) buffer (scatter/gather indexing, NOT the
+               GShard one-hot matmul whose (N*k, E, cap) mask tensor is
+               infeasible at 1M-token batches), each expert runs a dense FFN
+               over its buffer, results are gathered back and combined with
+               the router probabilities.  top-k active FLOPs only
+               (+ capacity padding).  Overflowing tokens are dropped for
+               that expert (standard GShard semantics).  This is the
+               beyond-paper hillclimb lever for the MoE archs.
+
+Router: linear -> top-k -> softmax over the selected logits (OLMoE
+normalizes after selection).  An auxiliary load-balance loss (Switch eq. 4)
+is returned for the training objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init
+
+
+def moe_init(key, cfg, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, e), d, jnp.float32),  # router math in f32
+        "wi_gate": dense_init(k2, (e, d, f), d, dtype),
+        "wi_up": dense_init(k3, (e, d, f), d, dtype),
+        "wo": dense_init(k4, (e, f, d), f, dtype, scale=1.0 / np.sqrt(2 * max(1, cfg.n_layers))),
+    }
+
+
+def _router(p, cfg, x):
+    """Returns (weights (N,E) f32 with zeros at non-selected, aux_loss)."""
+    n, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = x.astype(jnp.float32) @ p["router"]  # (N, E)
+    top_vals, top_idx = jax.lax.top_k(logits, k)  # (N, k)
+    top_w = jax.nn.softmax(top_vals, axis=-1)  # normalize over selected
+    # scatter back to dense (N, E): one-hot combine
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (N, k, E)
+    weights = jnp.einsum("nk,nke->ne", top_w, onehot)
+    # Switch-style load-balance aux loss: E * sum_e f_e * P_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # f_e
+    frac_prob = jnp.mean(probs, axis=0)  # P_e
+    aux = e * jnp.sum(frac_tokens * frac_prob)
+    return weights, top_idx, top_w, aux
+
+
+def _expert_ffn(p, xs):
+    """xs: (E, C, D) -> (E, C, D); batched SwiGLU over the expert axis."""
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["wi_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xs, p["wi_up"])
+    return jnp.einsum("ecf,efd->ecd", g * u, p["wo"])
+
+
+def moe_dense(p, cfg, x):
+    """Baseline: all experts on all tokens.  x: (B,S,D) -> (B,S,D)."""
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    weights, _, _, aux = _router(p, cfg, xf)
+    g = jax.nn.silu(jnp.einsum("nd,edf->enf", xf, p["wi_gate"]))
+    u = jnp.einsum("nd,edf->enf", xf, p["wi_up"])
+    y = jnp.einsum("enf,efd->end", g * u, p["wo"])  # (E, N, D)
+    out = jnp.einsum("end,ne->nd", y.astype(jnp.float32), weights)
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def moe_dispatch(p, cfg, x):
+    """Capacity-based scatter/gather dispatch.  x: (B,S,D) -> (B,S,D).
+
+    capacity = ceil(N * top_k / E * capacity_factor), rounded up to a
+    multiple of 8 (TPU sublane).  Overflowing tokens are dropped (their
+    contribution for that expert is zero) - standard GShard semantics.
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(n, d)
+    weights, top_idx, top_w, aux = _router(p, cfg, xf)
+    del weights
+
+    cap = int(np.ceil(n * k / e * cfg.capacity_factor))
+    cap = max(8, int(np.ceil(cap / 8) * 8))
+
+    # position of each (token, slot) within its expert's buffer: running
+    # count of prior slots routed to the same expert, in token order.
+    expert_of = top_idx.reshape(n * k)  # (T,) T = N*k slots
+    onehot = jax.nn.one_hot(expert_of, e, dtype=jnp.int32)  # (T, E)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # (T,)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap - 1)  # clamped; dropped slots masked out
+
+    token_of = jnp.arange(n * k) // k
+    contrib = xf[token_of] * keep[:, None].astype(xf.dtype)  # (T, D)
+    xs = jnp.zeros((e, cap, d), xf.dtype).at[expert_of, pos_c].add(
+        contrib, mode="drop", unique_indices=False
+    )
+
+    ys = _expert_ffn(p, xs)  # (E, cap, D)
+
+    back = ys[expert_of, pos_c]  # (T, D)
+    comb_w = top_w.reshape(n * k) * keep.astype(jnp.float32)
+    out = jnp.sum(
+        (back.astype(jnp.float32) * comb_w[:, None]).reshape(n, k, d), axis=1
+    )
+    return out.reshape(b, s, d).astype(x.dtype), aux
+
+
+def _positions_sorted(expert_of, e):
+    """Position of each slot within its expert's buffer, via stable sort.
+
+    expert_of: (T,) int32 -> (T,) int32 positions.  O(T log T) - replaces
+    the (T, E) one-hot cumsum whose reduce-window lowering is costed
+    quadratically by XLA (measured +1.6 s compute on olmoe train_4k;
+    EXPERIMENTS.md §Perf).
+    """
+    t = expert_of.shape[0]
+    order = jnp.argsort(expert_of, stable=True)  # slots grouped by expert
+    sorted_e = expert_of[order]
+    # index of the first slot of each expert's run
+    run_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos_sorted = jnp.arange(t, dtype=jnp.int32) - run_start[sorted_e].astype(jnp.int32)
+    # scatter back to original slot order
+    return jnp.zeros((t,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_dispatch_grouped(p, cfg, x):
+    """Group-local capacity dispatch (GShard-style groups).
+
+    The flat ``moe_dispatch`` computes token positions with a GLOBAL cumsum
+    over all N*k slots and scatters into a globally-indexed (E, cap, D)
+    buffer - under expert sharding GSPMD can only realise that scatter by
+    replicating the token tensor (measured: collective term 2.0 -> 15.2 s
+    on olmoe train_4k; EXPERIMENTS.md §Perf).  Here every batch row is its
+    own routing group: position math (cumsum, one-hot) is group-local so
+    it partitions cleanly over ``data``; the only cross-mesh movement is
+    the compact (G, E, cap_g, D) expert buffer entering the einsum with
+    the E-sharded expert weights (an all-to-all of ~N*k/E*capf tokens -
+    6.4x smaller than the dense-all intermediates it replaces).
+
+    Per-group capacity cap_g = ceil(n_g * k / E * capacity_factor)
+    (standard GShard semantics: overflow dropped per group).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    n = b * s
+    xf = x.reshape(n, d)
+    _, top_idx, top_w, aux = _router(p, cfg, xf)
+
+    g = b  # one group per batch row
+    n_g = s
+    cap = int(np.ceil(n_g * k / e * cfg.capacity_factor))
+    cap = max(8, int(np.ceil(cap / 8) * 8))
+
+    expert_of = top_idx.reshape(g, n_g * k)  # (G, T_g)
+    pos = jax.vmap(lambda eo: _positions_sorted(eo, e))(expert_of)  # (G, T_g)
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap - 1)
+
+    xg = x  # (G, n_g, D)
+    token_of = jnp.arange(n_g * k) // k  # local token index within group
+    contrib = xg[:, token_of, :] * keep[..., None].astype(x.dtype)  # (G, T_g, D)
+    xs = jnp.zeros((g, e, cap, d), x.dtype).at[
+        jnp.arange(g)[:, None], expert_of, pos_c
+    ].add(contrib, mode="drop")
+
+    # expert FFN over the grouped buffer; E sharded -> all-to-all on xs
+    gg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs, p["wi_gate"]))
+    uu = jnp.einsum("gecd,edf->gecf", xs, p["wi_up"])
+    ys = jnp.einsum("gecf,efd->gecd", gg * uu, p["wo"])  # (G, E, cap, D)
+
+    back = ys[jnp.arange(g)[:, None], expert_of, pos_c]  # (G, T_g, D)
+    comb_w = top_w.reshape(g, n_g * k) * keep.astype(jnp.float32)
+    out = jnp.sum(
+        (back.astype(jnp.float32) * comb_w[..., None]).reshape(g, n_g, k, d), axis=2
+    )
+    return out.astype(x.dtype), aux
+
+
+def moe_ffn(p, cfg, x, impl: str = "dense"):
+    if impl == "dense":
+        return moe_dense(p, cfg, x)
+    if impl == "dispatch":
+        return moe_dispatch(p, cfg, x)
+    if impl == "dispatch_grouped":
+        return moe_dispatch_grouped(p, cfg, x)
+    raise ValueError(f"unknown moe impl {impl!r}")

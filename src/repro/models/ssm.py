@@ -1,0 +1,249 @@
+"""Mamba2 (SSD / state-space duality) mixer block.  arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the output
+is a (masked, decay-weighted) attention-like matmul - MXU-friendly; across
+chunks a constant-size recurrent state (B, H, P, N) is carried by
+``lax.scan``.  Decode is the pure recurrence: O(1) in sequence length, which
+is what makes the ``long_500k`` shape native for the SSM/hybrid archs.
+
+Shapes:  d_inner = expand * d_model,  H = d_inner // head_dim (P),
+N = ssm_state,  G = 1 group (B/C shared across heads, Mamba2 default).
+
+All decay/softmax-free accumulation is f32; parameters and activations keep
+the configured dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, rmsnorm_noscale
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def ssm_init(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner, h = ssm_dims(cfg)
+    n, w = cfg.ssm_state, cfg.ssm_conv_width
+    conv_ch = d_inner + 2 * n  # x, B, C all pass through the causal conv
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # A in (-exp) parametrisation; dt bias init so softplus(dt_bias) ~ U[1e-3, 1e-1]
+    dt = np.exp(
+        np.random.RandomState(0).uniform(np.log(1e-3), np.log(1e-1), size=(h,))
+    ).astype(np.float32)
+    dt_bias = dt + np.log(-np.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(k1, (d, d_inner * 2 + 2 * n + h), d, dtype),
+        "conv_w": (jax.random.normal(k2, (w, conv_ch), jnp.float32) * (1.0 / np.sqrt(w))).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.asarray(dt_bias),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": dense_init(k3, (d_inner, d), d_inner, dtype, scale=1.0 / np.sqrt(2 * max(1, cfg.n_layers))),
+    }
+
+
+def _split_proj(p, cfg, x):
+    """x: (B,S,D) -> z (B,S,d_inner), xBC (B,S,d_inner+2N), dt (B,S,H)."""
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner : 2 * d_inner + 2 * n]
+    dt = zxbcdt[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, width):
+    """Depthwise causal conv over the sequence axis.  xbc: (B,S,C)."""
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(width)
+    )
+    return jax.nn.silu(out + p["conv_b"][None, None, :])
+
+
+def _segsum(da):
+    """Log-decay matrix: L[t, s] = sum_{s < u <= t} da[u], -inf for s > t.
+
+    da: (..., L) f32 -> (..., L, L).
+    """
+    L = da.shape[-1]
+    cs = jnp.cumsum(da, axis=-1)
+    # L[t,s] = cs[t] - cs[s]  (decay applied strictly after step s)
+    mat = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, mat, -jnp.inf)
+
+
+def ssd_chunked(cfg, xh, Bm, Cm, dt_soft, A):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,P)  Bm,Cm: (B,S,N)  dt_soft: (B,S,H) f32  A: (H,) f32 (<0)
+    Returns y: (B,S,H,P) f32, final_state: (B,H,P,N) f32.
+    """
+    b, s, h, pdim = xh.shape
+    n = Bm.shape[-1]
+    L = min(cfg.ssm_chunk, s)
+    while s % L:
+        L //= 2
+    nc = s // L
+
+    # operands keep their storage dtype (bf16 at production configs) with
+    # f32 ACCUMULATION via preferred_element_type - explicit .astype(f32)
+    # here would materialise f32 copies of the (B,S,...) tensors in HBM
+    # (EXPERIMENTS.md §Perf iteration 1); decay/cumsum math stays f32.
+    dtype = xh.dtype
+    xc = xh.reshape(b, nc, L, h, pdim)
+    Bc = Bm.reshape(b, nc, L, n)
+    Cc = Cm.reshape(b, nc, L, n)
+    da = (dt_soft * A[None, None, :]).reshape(b, nc, L, h)  # (B,c,L,H) f32, <= 0
+
+    # --- intra-chunk (attention-like, masked decay) ---
+    Ldec = _segsum(jnp.moveaxis(da, -1, -2))  # (B,c,H,L,L)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc,
+                        preferred_element_type=jnp.float32)  # shared over H
+    w = scores[:, :, None, :, :] * jnp.exp(Ldec)  # (B,c,H,L,L) f32
+    xdt = xc * dt_soft.reshape(b, nc, L, h).astype(dtype)[..., None]  # (B,c,L,H,P)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", w.astype(dtype), xdt,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk-final states ---
+    cum = jnp.cumsum(da, axis=2)  # (B,c,L,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,c,L,H)
+    states = jnp.einsum(
+        "bclh,bcln,bclhp->bchpn",
+        (decay_to_end * dt_soft.reshape(b, nc, L, h)).astype(dtype), Bc, xc,
+        preferred_element_type=jnp.float32,
+    )
+
+    # --- inter-chunk recurrence over chunk index ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,c,H) total decay of a chunk
+
+    def step(hprev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    hT, h_in = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+        unroll=min(cfg.ssm_scan_unroll, nc),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,c,H,P,N) state entering each chunk
+
+    # --- contribution of the carried state ---
+    in_decay = jnp.exp(cum)  # (B,c,L,H) decay from chunk start to step t
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc,
+                         h_in.astype(dtype), in_decay.astype(dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(b, s, h, pdim)
+    return y, hT
+
+
+def ssm_forward(p, cfg, x):
+    """Training/prefill pass.  x: (B,S,D) normed -> (B,S,D)."""
+    d_inner, h = ssm_dims(cfg)
+    n, pdim = cfg.ssm_state, cfg.ssm_head_dim
+    b, s, d = x.shape
+
+    z, xbc, dt = _split_proj(p, cfg, x)
+    xbc = _causal_conv(p, xbc, cfg.ssm_conv_width)
+    xs = xbc[..., :d_inner].reshape(b, s, h, pdim)
+    Bm = xbc[..., d_inner : d_inner + n]
+    Cm = xbc[..., d_inner + n :]
+
+    dt_soft = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(cfg, xs, Bm, Cm, dt_soft, A)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_noscale(y, cfg.norm_eps) * (1.0 + p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (recurrent, O(1) per token)
+# ---------------------------------------------------------------------------
+
+
+def ssm_init_cache(cfg, batch, dtype):
+    d_inner, h = ssm_dims(cfg)
+    n, w = cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "conv": jnp.zeros((batch, w - 1, d_inner + 2 * n), dtype),
+        "state": jnp.zeros((batch, h, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def ssm_decode(p, cfg, x, cache):
+    """One-token recurrent step.  x: (B,1,D) -> (out (B,1,D), new cache)."""
+    d_inner, h = ssm_dims(cfg)
+    n, pdim, w = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv_width
+    b = x.shape[0]
+
+    z, xbc, dt = _split_proj(p, cfg, x)  # (B,1,*)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,w,C)
+    conv_out = jnp.sum(window * p["conv_w"][None, :, :], axis=1) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)  # (B,C)
+    new_conv = window[:, 1:, :]
+
+    xs = xbc1[:, :d_inner].reshape(b, h, pdim).astype(jnp.float32)
+    Bm = xbc1[:, d_inner : d_inner + n].astype(jnp.float32)
+    Cm = xbc1[:, d_inner + n :].astype(jnp.float32)
+
+    dt_soft = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])  # (B,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    decay = jnp.exp(dt_soft * A[None, :])  # (B,H)
+
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt_soft, Bm, xs
+    )
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state) + p["D"][None, :, None] * xs
+
+    y = y.reshape(b, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_noscale(y, cfg.norm_eps) * (1.0 + p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    return y @ p["out_proj"], {"conv": new_conv, "state": state}
+
+
+def ssm_forward_with_cache(p, cfg, x):
+    """Prefill pass that also returns the decode cache (conv tail + final
+    recurrent state) so serving can continue token-by-token."""
+    d_inner, h = ssm_dims(cfg)
+    n, pdim = cfg.ssm_state, cfg.ssm_head_dim
+    b, s, d = x.shape
+    w = cfg.ssm_conv_width
+
+    z, xbc_pre, dt = _split_proj(p, cfg, x)
+    xbc = _causal_conv(p, xbc_pre, w)
+    xs = xbc[..., :d_inner].reshape(b, s, h, pdim)
+    Bm = xbc[..., d_inner : d_inner + n]
+    Cm = xbc[..., d_inner + n :]
+
+    dt_soft = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, hT = ssd_chunked(cfg, xs, Bm, Cm, dt_soft, A)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+
+    y = y.reshape(b, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm_noscale(y, cfg.norm_eps) * (1.0 + p["norm_scale"].astype(jnp.float32)).astype(x.dtype)
+    # conv buffer = the last w-1 PRE-activation projections (matches decode)
+    conv_tail = xbc_pre[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
+        xbc_pre, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    cache = {"conv": conv_tail, "state": hT}
+    return y @ p["out_proj"], cache

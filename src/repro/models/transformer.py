@@ -1,0 +1,430 @@
+"""Unified decoder-stack model covering all assigned architecture families.
+
+One parameter/init/apply codepath serves dense (gemma/granite), MoE (olmoe,
+granite-moe), SSM (mamba2), hybrid (zamba2), VLM (internvl2) and audio
+(musicgen).  The layer schedule comes from ``cfg.pattern * n_rep + tail``;
+the pattern repetitions run under ``jax.lax.scan`` with parameters stacked
+on a leading ``n_rep`` axis so compile time and HLO size stay flat in depth
+(critical for the 64-layer mamba2 dry-run).
+
+`shared_attn` sublayers (Zamba2) hold ONE parameter set outside the scan -
+captured by closure, broadcast into every repetition - while their KV caches
+are per-repetition (stacked like everything else).
+
+Modality frontends per the carve-out:
+  vision_stub      batch["patch_embeds"] (B, n_patches, d_vision) projected
+                   and prepended to the token embeddings.
+  audio_codebooks  batch["tokens"] (B, K_cb, S): per-codebook embeddings are
+                   summed; the LM head has one output head per codebook.
+
+Params are plain nested dicts; embedding is tied to the LM head (logits =
+x @ embed.T), except audio which has per-codebook heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense_init,
+    embed_init,
+    mlp,
+    mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+
+AUX_LOSS_COEF = 0.01  # MoE load-balance coefficient (Switch / OLMoE default)
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Long-context variant (the one documented carve-in for dense archs)
+# ---------------------------------------------------------------------------
+
+
+def apply_long_context(cfg):
+    """For ``long_500k`` on window-mode archs: cap every attention window.
+
+    SSM/hybrid archs (long_context_mode="native") are returned unchanged -
+    their recurrence is already O(1) in context.
+    """
+    if cfg.long_context_mode != "window":
+        return cfg
+    w = cfg.long_context_window
+
+    def capw(spec):
+        if spec.kind in ("attn", "moe", "shared_attn"):
+            return spec.replace(window=w if spec.window is None else min(spec.window, w))
+        return spec
+
+    return cfg.replace(
+        pattern=tuple(capw(s) for s in cfg.pattern),
+        tail=tuple(capw(s) for s in cfg.tail),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply (one sublayer of the schedule)
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key, spec, cfg, dtype):
+    if spec.kind == "ssm":
+        k1 = jax.random.fold_in(key, 1)
+        return {"ln1": rmsnorm_init(cfg.d_model, dtype), "ssm": ssm_mod.ssm_init(k1, cfg, dtype)}
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_mod.attn_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if spec.kind == "moe":
+        p["moe"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:  # attn / shared_attn
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.n_layers, dtype)
+    return p
+
+
+def _block_fwd(p, spec, cfg, x, positions):
+    """Full-sequence (train/prefill) sublayer.  Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if spec.kind == "ssm":
+        return x + ssm_mod.ssm_forward(p["ssm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps)), aux
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + attn_mod.attention_fwd(p["attn"], cfg, h, positions, spec.window,
+                                   spec.rope_base, q_block=cfg.attn_q_block)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spec.kind == "moe":
+        y, aux = moe_mod.moe_ffn(p["moe"], cfg, h, getattr(cfg, "moe_impl", "dense"))
+        return x + y, aux
+    return x + mlp(p["mlp"], h), aux
+
+
+def _block_decode(p, spec, cfg, x, pos, cache):
+    """Single-token sublayer.  Returns (x, new_cache)."""
+    if spec.kind == "ssm":
+        y, new_cache = ssm_mod.ssm_decode(p["ssm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), cache)
+        return x + y, new_cache
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    y, new_cache = attn_mod.attention_decode(p["attn"], cfg, h, pos, cache, spec.window, spec.rope_base)
+    x = x + y
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spec.kind == "moe":
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg, h, getattr(cfg, "moe_impl", "dense"))
+        return x + y, new_cache
+    return x + mlp(p["mlp"], h), new_cache
+
+
+def _block_cache_init(spec, cfg, batch, seq_len, dtype):
+    if spec.kind == "ssm":
+        return ssm_mod.ssm_init_cache(cfg, batch, dtype)
+    cap = seq_len if spec.window is None else min(spec.window, seq_len)
+    return attn_mod.init_cache(cfg, batch, cap, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+
+    if cfg.frontend == "audio_codebooks":
+        params["embed"] = embed_init(keys[0], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model), dtype)
+        params["heads"] = dense_init(keys[5], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size), cfg.d_model, dtype)
+    else:
+        params["embed"] = embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype)
+    if cfg.frontend == "vision_stub":
+        params["vis_proj"] = dense_init(keys[1], (cfg.d_vision, cfg.d_model), cfg.d_vision, dtype)
+
+    has_shared = any(s.kind == "shared_attn" for s in cfg.layers)
+    if has_shared:
+        shared_spec = next(s for s in cfg.layers if s.kind == "shared_attn")
+        params["shared"] = _block_init(keys[2], shared_spec, cfg, dtype)
+
+    if cfg.pattern and cfg.n_rep:
+        rep_keys = jax.random.split(keys[3], cfg.n_rep)
+
+        def one_rep(k):
+            ks = jax.random.split(k, len(cfg.pattern))
+            return tuple(
+                {} if s.kind == "shared_attn" else _block_init(ks[j], s, cfg, dtype)
+                for j, s in enumerate(cfg.pattern)
+            )
+
+        params["pattern"] = jax.vmap(one_rep)(rep_keys)
+    if cfg.tail:
+        tkeys = jax.random.split(keys[4], len(cfg.tail))
+        params["tail"] = tuple(
+            _block_init(tkeys[j], s, cfg, dtype) for j, s in enumerate(cfg.tail)
+        )
+
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding frontends
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch):
+    """Returns (x (B,S,D), positions (B,S))."""
+    scale = jnp.asarray(np.sqrt(cfg.d_model), _dtype(cfg))
+    if cfg.frontend == "audio_codebooks":
+        toks = batch["tokens"]  # (B, K_cb, S)
+        x = sum(
+            jnp.take(params["embed"][k], toks[:, k], axis=0)
+            for k in range(cfg.n_codebooks)
+        )
+        x = x * scale
+        b, s = toks.shape[0], toks.shape[2]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        return x, pos
+    if cfg.frontend == "vision_stub":
+        patches = batch["patch_embeds"].astype(_dtype(cfg)) @ params["vis_proj"]
+        toks = batch["tokens"]
+        text = jnp.take(params["embed"], toks, axis=0) * scale
+        x = jnp.concatenate([patches, text], axis=1)
+        b, s = x.shape[0], x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        return x, pos
+    toks = batch["tokens"]
+    x = jnp.take(params["embed"], toks, axis=0) * scale
+    b, s = toks.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return x, pos
+
+
+def lm_logits(params, cfg, x):
+    """Tied LM head; audio gets per-codebook heads -> (B,S,K,V)."""
+    if cfg.frontend == "audio_codebooks":
+        return jnp.einsum("bsd,kdv->bskv", x, params["heads"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    if cfg.final_softcap is not None:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg, batch):
+    """Returns (hidden (B,S,D), aux_loss scalar)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    aux_total = jnp.float32(0.0)
+    remat = cfg.remat == "block"
+
+    def pin(x):
+        """Sequence-parallel residual-stream constraint (launch-only)."""
+        if not cfg.seq_shard:
+            return x
+        from jax.sharding import PartitionSpec as P
+
+        return jax.lax.with_sharding_constraint(x, P("data", "model", None))
+
+    x = pin(x)
+
+    def apply_block(p, spec, x):
+        fn = _block_fwd
+        if remat:
+            # backward recomputes attention probabilities / FFN intermediates
+            # instead of saving them (needed to fit v5e HBM at train_4k;
+            # prevent_cse=False is the recommended setting under scan)
+            fn = jax.checkpoint(_block_fwd, static_argnums=(1, 2), prevent_cse=False)
+        return fn(p, spec, cfg, x, positions)
+
+    if cfg.pattern and cfg.n_rep:
+        shared = params.get("shared")
+
+        def rep_body(carry, rep_params):
+            x, aux = carry
+            for j, spec in enumerate(cfg.pattern):
+                p = shared if spec.kind == "shared_attn" else rep_params[j]
+                x, a = apply_block(p, spec, x)
+                x = pin(x)
+                aux = aux + a
+            return (x, aux), None
+
+        (x, aux_total), _ = jax.lax.scan(rep_body, (x, aux_total), params["pattern"])
+
+    for j, spec in enumerate(cfg.tail):
+        p = params.get("shared") if spec.kind == "shared_attn" else params["tail"][j]
+        x, a = apply_block(p, spec, x)
+        x = pin(x)
+        aux_total = aux_total + a
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean CE in f32.  logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(params, cfg, batch):
+    """Next-token CE (+ MoE aux).  batch["labels"] aligned with positions."""
+    hidden, aux = forward(params, cfg, batch)
+    if cfg.frontend == "vision_stub":
+        # loss only over the text region (patches carry no labels)
+        hidden = hidden[:, cfg.n_patches :, :]
+    logits = lm_logits(params, cfg, hidden)
+    if cfg.frontend == "audio_codebooks":
+        labels = batch["labels"]  # (B, K, S)
+        loss = cross_entropy(logits, jnp.moveaxis(labels, 1, 2))
+    else:
+        loss = cross_entropy(logits, batch["labels"])
+    return loss + AUX_LOSS_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against caches)
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg, batch, seq_len):
+    dtype = _dtype(cfg)
+    caches: dict[str, Any] = {}
+    if cfg.pattern and cfg.n_rep:
+
+        def one_rep(_):
+            return tuple(
+                _block_cache_init(s, cfg, batch, seq_len, dtype) for s in cfg.pattern
+            )
+
+        caches["pattern"] = jax.vmap(one_rep)(jnp.arange(cfg.n_rep))
+    if cfg.tail:
+        caches["tail"] = tuple(
+            _block_cache_init(s, cfg, batch, seq_len, dtype) for s in cfg.tail
+        )
+    return caches
+
+
+def decode_step(params, cfg, batch, pos, caches):
+    """One token for every sequence in the batch.
+
+    batch supplies the current token(s); pos is the scalar absolute position.
+    Returns (logits (B,1,V...), new caches).
+    """
+    x, _ = embed_inputs(params, cfg, batch)  # (B,1,D)
+    shared = params.get("shared")
+    new_caches: dict[str, Any] = {}
+
+    if cfg.pattern and cfg.n_rep:
+
+        def rep_body(x, inp):
+            rep_params, rep_cache = inp
+            new_cache = []
+            for j, spec in enumerate(cfg.pattern):
+                p = shared if spec.kind == "shared_attn" else rep_params[j]
+                x, c = _block_decode(p, spec, cfg, x, pos, rep_cache[j])
+                new_cache.append(c)
+            return x, tuple(new_cache)
+
+        x, new_caches["pattern"] = jax.lax.scan(
+            rep_body, x, (params["pattern"], caches["pattern"])
+        )
+
+    if cfg.tail:
+        tail_caches = []
+        for j, spec in enumerate(cfg.tail):
+            p = shared if spec.kind == "shared_attn" else params["tail"][j]
+            x, c = _block_decode(p, spec, cfg, x, pos, caches["tail"][j])
+            tail_caches.append(c)
+        new_caches["tail"] = tuple(tail_caches)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill -> decode cache handoff (serving path)
+# ---------------------------------------------------------------------------
+
+
+def _block_prefill(p, spec, cfg, x, positions, capacity):
+    """Sublayer forward that ALSO builds the decode cache it leaves behind.
+
+    ``capacity``: total sequence budget (prompt + planned decode steps);
+    full-attention layers allocate it outright, windowed layers allocate
+    min(window, capacity).
+    """
+    if spec.kind == "ssm":
+        y, cache = ssm_mod.ssm_forward_with_cache(
+            p["ssm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps))
+        return x + y, cache
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = attn_mod._project_qkv(p["attn"], cfg, h, positions, spec.rope_base)
+    cap = capacity if spec.window is None else min(spec.window, capacity)
+    cache = attn_mod.pack_prefill_cache(cfg, k, v, positions, cap, _dtype(cfg))
+    # reuse the blockwise attention for the actual mixing
+    y = attn_mod.attention_fwd(p["attn"], cfg, h, positions, spec.window,
+                               spec.rope_base, q_block=cfg.attn_q_block)
+    x = x + y
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spec.kind == "moe":
+        y, _ = moe_mod.moe_ffn(p["moe"], cfg, h, getattr(cfg, "moe_impl", "dense"))
+        return x + y, cache
+    return x + mlp(p["mlp"], h), cache
+
+
+def prefill_with_caches(params, cfg, batch, capacity=None):
+    """Full prompt forward returning (last-token logits, decode caches).
+
+    ``capacity``: total sequence budget (prompt + decode steps; defaults
+    to prompt_len + 64).  The caches match ``init_caches(cfg, B, capacity)``
+    structure exactly, so ``decode_step(params, cfg, next_tok, pos=S,
+    caches)`` continues the sequence (tests/test_models.py verifies the
+    logits equal a full forward).
+    """
+    x, positions = embed_inputs(params, cfg, batch)
+    seq_len = capacity or (x.shape[1] + 64)
+    shared = params.get("shared")
+    caches: dict[str, Any] = {}
+
+    if cfg.pattern and cfg.n_rep:
+
+        def rep_body(x, rep_params):
+            new_caches = []
+            for j, spec in enumerate(cfg.pattern):
+                p = shared if spec.kind == "shared_attn" else rep_params[j]
+                x, c = _block_prefill(p, spec, cfg, x, positions, seq_len)
+                new_caches.append(c)
+            return x, tuple(new_caches)
+
+        x, caches["pattern"] = jax.lax.scan(rep_body, x, params["pattern"])
+
+    if cfg.tail:
+        tail_caches = []
+        for j, spec in enumerate(cfg.tail):
+            p = shared if spec.kind == "shared_attn" else params["tail"][j]
+            x, c = _block_prefill(p, spec, cfg, x, positions, seq_len)
+            tail_caches.append(c)
+        caches["tail"] = tuple(tail_caches)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return lm_logits(params, cfg, x[:, -1:, :]), caches

@@ -1,0 +1,2 @@
+"""Optimizers (mini-optax: (init, update) pairs over pytrees)."""
+from repro.optim.sgd import sgd, momentum, adam, apply_updates, cosine_schedule  # noqa: F401

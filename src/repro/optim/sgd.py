@@ -1,0 +1,98 @@
+"""First-order optimizers as (init_fn, update_fn) pairs over pytrees.
+
+update_fn(grads, state, params) -> (updates, new_state); apply with
+``apply_updates``.  All moment accumulators are f32 regardless of the
+parameter dtype (bf16-safe); updates are cast back to the leaf dtype.
+
+These drive (a) the paper-faithful local SGD (Algorithm 2 uses plain SGD),
+(b) the baseline FL methods, and (c) the example LM training driver.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Optimizer = Tuple[Callable, Callable]
+
+
+def apply_updates(params: Pytree, updates: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        return jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads), state
+
+    return init, update
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params=None):
+        del params
+        m = jax.tree.map(lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda v, g: -lr * (beta * v + g.astype(jnp.float32)), m, grads)
+        else:
+            upd = jax.tree.map(lambda v: -lr * v, m)
+        return upd, m
+
+    return init, update
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+    count: jnp.ndarray
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """lr may be a float or a schedule fn step->float."""
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jax.tree.map(z, params), jax.tree.map(z, params),
+                         jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        count = state.count + 1
+        lr_t = lr(count) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1**count.astype(jnp.float32)), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2**count.astype(jnp.float32)), nu)
+        upd = jax.tree.map(lambda m, v: -lr_t * m / (jnp.sqrt(v) + eps), mu_hat, nu_hat)
+        if weight_decay and params is not None:
+            upd = jax.tree.map(
+                lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32), upd, params
+            )
+        return upd, AdamState(mu, nu, count)
+
+    return init, update
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(1, warmup)
+        frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched

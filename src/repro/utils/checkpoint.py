@@ -1,0 +1,79 @@
+"""Checkpointing: pytree save/restore with a JSON manifest (offline-safe;
+no orbax dependency).
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json
+The manifest records the flattened key paths and dtypes so restore can
+rebuild the exact pytree structure (dicts, tuples, NamedTuples degrade to
+their dict/tuple forms via jax.tree flattening against a template).
+
+Used by the FL drivers (server state + per-client personalized models) and
+the LM example trainer.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def save_checkpoint(ckpt_dir, step: int, tree: Any, extra: Optional[dict] = None):
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    named = _flatten_with_names(tree)
+    arrays = {f"a{i}": np.asarray(leaf) for i, (_, leaf) in enumerate(named)}
+    np.savez(d / "arrays.npz", **arrays)
+    manifest = {
+        "step": step,
+        "names": [n for n, _ in named],
+        "dtypes": [str(np.asarray(l).dtype) for _, l in named],
+        "extra": extra or {},
+    }
+    (d / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return str(d)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in d.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(ckpt_dir, template: Any, step: Optional[int] = None):
+    """Restore into the structure of ``template``.  Returns (tree, extra)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    data = np.load(d / "arrays.npz")
+
+    named_t = _flatten_with_names(template)
+    by_name = {n: data[f"a{i}"] for i, n in enumerate(manifest["names"])}
+    assert [n for n, _ in named_t] == manifest["names"], (
+        "checkpoint/template structure mismatch"
+    )
+    leaves = [
+        jax.numpy.asarray(by_name[n]).astype(l.dtype) if hasattr(l, "dtype")
+        else by_name[n]
+        for n, l in named_t
+    ]
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

@@ -1,0 +1,104 @@
+"""Pytree arithmetic helpers.
+
+pFedSOP operates on *gradient-update pytrees* (same structure as the model
+parameters).  All reductions here return f32 scalars regardless of leaf dtype
+so the Gompertz / Sherman-Morrison scalar math is numerically stable even for
+bf16 parameter trees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_dot(a, b):
+    """Global dot product <a, b> across all leaves, f32 accumulation."""
+    leaves_a = jax.tree.leaves(a)
+    leaves_b = jax.tree.leaves(b)
+    parts = [
+        jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32))
+        for x, y in zip(leaves_a, leaves_b)
+    ]
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.float32(0.0)
+
+
+def tree_sqnorm(a):
+    """Global squared L2 norm, f32 accumulation."""
+    return tree_dot(a, a)
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_sqnorm(a))
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    """s * a with s a scalar (broadcast, cast back to leaf dtype)."""
+    return jax.tree.map(lambda x: (s * x.astype(jnp.float32)).astype(x.dtype), a)
+
+
+def tree_axpy(s, x, y):
+    """y + s * x, elementwise over the tree (cast back to y's leaf dtype)."""
+    return jax.tree.map(
+        lambda xi, yi: (yi.astype(jnp.float32) + s * xi.astype(jnp.float32)).astype(yi.dtype),
+        x,
+        y,
+    )
+
+
+def tree_lerp(beta, a, b):
+    """(1-beta)*a + beta*b elementwise over the tree."""
+    return jax.tree.map(
+        lambda x, y: (
+            (1.0 - beta) * x.astype(jnp.float32) + beta * y.astype(jnp.float32)
+        ).astype(x.dtype),
+        a,
+        b,
+    )
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a):
+    """Total number of scalar parameters."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a):
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)
+
+
+def tree_where(pred, a, b):
+    """Select tree a where pred else b (pred is a scalar bool)."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_flatten_to_vector(a):
+    """Concatenate all leaves into one f32 vector (small models only)."""
+    leaves = jax.tree.leaves(a)
+    return jnp.concatenate([x.astype(jnp.float32).reshape(-1) for x in leaves])
+
+
+def tree_unflatten_from_vector(vec, template):
+    """Inverse of tree_flatten_to_vector given a template tree."""
+    leaves, treedef = jax.tree.flatten(template)
+    out = []
+    offset = 0
+    for leaf in leaves:
+        n = int(leaf.size)
+        out.append(vec[offset : offset + n].reshape(leaf.shape).astype(leaf.dtype))
+        offset += n
+    return jax.tree.unflatten(treedef, out)

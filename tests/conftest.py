@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here - the smoke
+# tests and benches must see the single real CPU device.  Only
+# repro/launch/dryrun.py (its own process) forces 512 placeholder devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,65 @@
+"""Unit tests for the calibration composition math (no device lowering -
+the lowering path is exercised by launch/calibrate.py itself)."""
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.calibrate import _unrolled_cfg
+
+
+class TestUnrolledCfg:
+    def test_single_copy_structure(self):
+        cfg = get_config("gemma3-1b")
+        u = _unrolled_cfg(cfg, INPUT_SHAPES["train_4k"], 1)
+        assert u.n_rep == 0 and not u.pattern
+        assert len(u.tail) == len(cfg.pattern)
+        assert u.n_layers == len(cfg.pattern)
+        # all loop trip counts forced to 1
+        assert u.attn_q_block == 4096
+        assert u.ssm_chunk == 4096
+
+    def test_two_copies_doubles_tail(self):
+        cfg = get_config("zamba2-2.7b")
+        u1 = _unrolled_cfg(cfg, INPUT_SHAPES["prefill_32k"], 1)
+        u2 = _unrolled_cfg(cfg, INPUT_SHAPES["prefill_32k"], 2)
+        assert len(u2.tail) == 2 * len(u1.tail)
+        # shared_attn entries preserved (params stay shared via params["shared"])
+        kinds = [s.kind for s in u2.tail]
+        assert kinds.count("shared_attn") == 2
+
+    def test_chunk_override_sets_unroll(self):
+        cfg = get_config("mamba2-2.7b")
+        u = _unrolled_cfg(cfg, INPUT_SHAPES["train_4k"], 1, ssm_chunk=256)
+        assert u.ssm_chunk == 256
+        assert u.ssm_scan_unroll == 4096 // 256
+
+    def test_composition_formula(self):
+        """total = T*(fixed + unit*(n_rep + tail/|pattern|)) with
+        fixed = 2A - B, unit = B - A reproduces exact linear costs."""
+        # synthetic: cost(n_copies) = fixed + unit*n_copies
+        fixed, unit = 7.0, 3.0
+        a = fixed + unit * 1
+        b = fixed + unit * 2
+        u_est = b - a
+        f_est = a - u_est
+        np.testing.assert_allclose(u_est, unit)
+        np.testing.assert_allclose(f_est, fixed)
+        n_rep, tail_frac, t_iters = 21, 0.0, 8
+        total = t_iters * (f_est + u_est * (n_rep + tail_frac))
+        np.testing.assert_allclose(total, 8 * (7 + 3 * 21))
+
+
+class TestLongContextVariant:
+    def test_window_caps_for_dense(self):
+        from repro.models.transformer import apply_long_context
+
+        cfg = get_config("gemma2-9b")
+        lc = apply_long_context(cfg)
+        assert all(s.window is not None and s.window <= 4096 for s in lc.layers)
+
+    def test_native_archs_unchanged(self):
+        from repro.models.transformer import apply_long_context
+
+        for name in ["mamba2-2.7b", "zamba2-2.7b"]:
+            cfg = get_config(name)
+            assert apply_long_context(cfg) is cfg

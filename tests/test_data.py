@@ -1,0 +1,132 @@
+"""Data-substrate tests: partitioner invariants (hypothesis property tests)
++ federated container + synthetic generators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.data import (
+    FederatedData,
+    dirichlet_partition,
+    make_class_conditional_images,
+    pathological_partition,
+    synthetic_lm_stream,
+    lm_batch_iterator,
+)
+
+
+class TestDirichletPartition:
+    @given(
+        n=hst.integers(200, 2000),
+        n_classes=hst.integers(2, 10),
+        k=hst.integers(2, 20),
+        alpha=hst.floats(0.05, 10.0),
+        seed=hst.integers(0, 1000),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_partition_is_exact_cover(self, n, n_classes, k, alpha, seed):
+        """Every sample index appears in exactly one client."""
+        rng = np.random.RandomState(seed)
+        labels = rng.randint(0, n_classes, n)
+        parts = dirichlet_partition(labels, k, alpha, seed=seed)
+        allidx = np.concatenate(parts)
+        assert len(allidx) == n
+        assert len(np.unique(allidx)) == n
+
+    def test_low_alpha_is_heterogeneous(self):
+        """Dir(0.07) concentrates each class on few clients (paper setting)."""
+        rng = np.random.RandomState(0)
+        labels = rng.randint(0, 10, 20000)
+        parts = dirichlet_partition(labels, 100, alpha=0.07, seed=0)
+        # per-client label entropy should be far below uniform
+        ents = []
+        for idx in parts:
+            if len(idx) < 10:
+                continue
+            p = np.bincount(labels[idx], minlength=10) / len(idx)
+            p = p[p > 0]
+            ents.append(-(p * np.log(p)).sum())
+        assert np.mean(ents) < 0.5 * np.log(10)
+
+
+class TestPathologicalPartition:
+    @given(seed=hst.integers(0, 200))
+    @settings(max_examples=20, deadline=None)
+    def test_clients_see_few_classes(self, seed):
+        """Shard partitioner: each client sees ~b classes (paper: b=2 CIFAR10)."""
+        rng = np.random.RandomState(seed)
+        n, k, z = 4000, 10, 200  # -> 20 shards, b=2 per client
+        labels = np.sort(rng.randint(0, 10, n))
+        rng.shuffle(labels)
+        parts = pathological_partition(labels, k, shard_size=z, seed=seed)
+        for idx in parts:
+            assert len(idx) == (n // (k * z)) * z * ((n // z) // k) or len(idx) > 0
+            n_cls = len(np.unique(labels[idx]))
+            assert n_cls <= 4  # b=2 shards -> at most ~3 classes (shard spans)
+
+    def test_disjoint_and_sized(self):
+        labels = np.repeat(np.arange(10), 400)
+        parts = pathological_partition(labels, 10, shard_size=200, seed=0)
+        allidx = np.concatenate(parts)
+        assert len(np.unique(allidx)) == len(allidx)
+        for idx in parts:
+            assert len(idx) == 400  # 2 shards x 200
+
+
+class TestFederatedData:
+    def _make(self, k=8, n=800):
+        images, labels = make_class_conditional_images(n, 4, image_size=8, seed=0)
+        parts = dirichlet_partition(labels, k, 0.5, seed=0)
+        return FederatedData.from_partition(images, labels, parts, seed=0), labels
+
+    def test_split_fractions(self):
+        data, _ = self._make()
+        total = data.train_counts.sum() + data.test_counts.sum()
+        assert total <= 800
+        assert (data.train_counts >= data.test_counts).mean() > 0.7
+
+    def test_sample_round_batches_shapes_and_membership(self):
+        data, labels = self._make()
+        rng = np.random.RandomState(1)
+        ids = np.array([0, 3, 5])
+        b = data.sample_round_batches(rng, ids, T=4, batch=6)
+        assert b["images"].shape == (3, 4, 6, 8, 8, 3)
+        assert b["labels"].shape == (3, 4, 6)
+        # sampled labels must come from the client's own train indices
+        for i, cid in enumerate(ids):
+            own = set(labels[data.train_idx[cid][: data.train_counts[cid]]])
+            got = set(np.asarray(b["labels"][i]).ravel())
+            assert got <= own
+
+    def test_client_test_set_mask(self):
+        data, _ = self._make()
+        t = data.client_test_set(np.arange(8))
+        assert t["mask"].shape == t["labels"].shape
+        np.testing.assert_allclose(t["mask"].sum(1), data.test_counts)
+
+
+class TestSynthetic:
+    def test_images_learnable_structure(self):
+        """Class templates are separable: nearest-template classification
+        beats chance by a wide margin."""
+        images, labels = make_class_conditional_images(600, 5, image_size=8, seed=0)
+        assert images.shape == (600, 8, 8, 3)
+        means = np.stack([images[labels == c].mean(0) for c in range(5)])
+        d = ((images[:, None] - means[None]) ** 2).sum((2, 3, 4))
+        acc = (d.argmin(1) == labels).mean()
+        assert acc > 0.6, acc
+
+    def test_lm_stream_markov_structure(self):
+        s = synthetic_lm_stream(5000, 64, seed=0, branch=4)
+        assert s.min() >= 0 and s.max() < 64
+        # each token has at most `branch` successors
+        succ = {}
+        for a, b in zip(s[:-1], s[1:]):
+            succ.setdefault(int(a), set()).add(int(b))
+        assert max(len(v) for v in succ.values()) <= 4
+
+    def test_lm_batch_iterator(self):
+        s = synthetic_lm_stream(2000, 32, seed=0)
+        it = lm_batch_iterator(s, batch=4, seq_len=16, seed=0)
+        b = next(it)
+        assert b["tokens"].shape == (4, 16)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])

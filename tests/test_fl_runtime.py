@@ -1,0 +1,146 @@
+"""FL-runtime integration tests: every method runs; pFedSOP converges and
+beats FedAvg under heterogeneity (the paper's core claim, miniaturised)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet_cifar import SMALL_CNN
+from repro.core.baselines import METHODS, FedRep
+from repro.data import FederatedData, dirichlet_partition, make_class_conditional_images
+from repro.fl import Federation, FLRunConfig
+from repro.fl.runtime import masked_accuracy
+from repro.models import cnn
+
+
+CFG = SMALL_CNN
+
+
+@pytest.fixture(scope="module")
+def setup():
+    images, labels = make_class_conditional_images(1500, CFG.n_classes, CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 10, alpha=0.15, seed=0)  # heterogeneous
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+    return data, params, loss, acc
+
+
+def _method(name):
+    if name == "fedrep":
+        return FedRep(head_predicate=lambda path: "fc_" in path)
+    return METHODS[name]()
+
+
+def test_scaffold_control_variates_update(setup):
+    """SCAFFOLD: c_i moves after participation; server c tracks mean dc."""
+    data, params, loss, acc = setup
+    from repro.core.baselines import Scaffold
+
+    m = Scaffold(lr=0.05)
+    state = m.init_client(params)
+    broadcast = m.init_server(params)
+    rng = np.random.RandomState(0)
+    batches = data.sample_round_batches(rng, [0], T=3, batch=8)
+    b0 = jax.tree.map(lambda x: jnp.asarray(x[0]), batches)
+    new_state, upload, metrics = m.client_round(loss, state, broadcast, b0)
+    ci_norm = float(sum(jnp.sum(jnp.abs(l)) for l in jax.tree.leaves(new_state["c_i"])))
+    assert ci_norm > 0 and np.isfinite(float(metrics["loss"]))
+    stacked = jax.tree.map(lambda x: x[None], upload)
+    nb = m.server_update(broadcast, stacked)
+    c_norm = float(sum(jnp.sum(jnp.abs(l)) for l in jax.tree.leaves(nb["c"])))
+    assert c_norm > 0
+
+
+def test_fedexp_extrapolation_at_least_one(setup):
+    """FedExP's server step size eta_g >= 1 (falls back to FedAvg)."""
+    data, params, loss, acc = setup
+    from repro.core.baselines import FedExP
+
+    m = FedExP(lr=0.05)
+    broadcast = m.init_server(params)
+    rng = np.random.RandomState(0)
+    batches = data.sample_round_batches(rng, [0, 1], T=2, batch=8)
+    uploads = []
+    for i in range(2):
+        b = jax.tree.map(lambda x: jnp.asarray(x[i]), batches)
+        _, up, _ = m.client_round(loss, {}, broadcast, b)
+        uploads.append(up)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *uploads)
+    nb = m.server_update(broadcast, stacked)
+    for a, b_ in zip(jax.tree.leaves(nb), jax.tree.leaves(broadcast)):
+        assert np.all(np.isfinite(np.asarray(a, np.float32)))
+
+
+@pytest.mark.parametrize("name", sorted(METHODS))
+def test_method_runs_two_rounds(name, setup):
+    data, params, loss, acc = setup
+    run_cfg = FLRunConfig(n_clients=10, participation=0.3, rounds=2, batch=16,
+                          local_iters=2, seed=1)
+    fed = Federation(_method(name), loss, acc, params, data, run_cfg)
+    hist = fed.run()
+    assert len(hist["loss"]) == 2
+    assert all(np.isfinite(v) for v in hist["loss"])
+    assert all(0.0 <= a <= 1.0 for a in hist["acc"])
+
+
+def test_pfedsop_converges_and_beats_fedavg(setup):
+    """Miniature of the paper's Table II/Fig 2 claim: under heterogeneous
+    partitioning, pFedSOP reaches higher personalized accuracy than FedAvg
+    within the same round budget, and its training loss decreases."""
+    data, params, loss, acc = setup
+    run_cfg = FLRunConfig(n_clients=10, participation=0.4, rounds=8, batch=16,
+                          local_iters=4, seed=0)
+    results = {}
+    for name in ["pfedsop", "fedavg"]:
+        fed = Federation(_method(name), loss, acc, params, data, run_cfg)
+        results[name] = fed.run()
+
+    pf_hist, fa_hist = results["pfedsop"], results["fedavg"]
+    assert pf_hist["loss"][-1] < pf_hist["loss"][0], "pFedSOP loss must decrease"
+    assert pf_hist["mean_best_acc"] > fa_hist["mean_best_acc"], (
+        pf_hist["mean_best_acc"], fa_hist["mean_best_acc"])
+
+
+def test_partial_participation_tracks_latest_delta(setup):
+    """A client absent for rounds keeps its latest delta (paper Sec. IV)."""
+    data, params, loss, acc = setup
+    run_cfg = FLRunConfig(n_clients=10, participation=0.2, rounds=4, batch=16,
+                          local_iters=2, seed=3)
+    fed = Federation(_method("pfedsop"), loss, acc, params, data, run_cfg)
+    fed.run()
+    seen = np.asarray(fed.client_states.rounds_seen)
+    has = np.asarray(fed.client_states.has_delta)
+    assert (seen > 0).sum() >= 2  # some clients participated
+    np.testing.assert_array_equal(has, seen > 0)
+
+
+def test_vmap_equals_sequential_clients(setup):
+    """The vmap'd round == a python loop over clients (numerics check)."""
+    data, params, loss, acc = setup
+    method = _method("pfedsop")
+    k = 4
+    states = [method.init_client(params) for _ in range(k)]
+    broadcast = method.init_server(params)
+    rng = np.random.RandomState(0)
+    ids = np.arange(k)
+    batches = data.sample_round_batches(rng, ids, T=2, batch=8)
+
+    # sequential
+    seq_uploads = []
+    for i in range(k):
+        b_i = jax.tree.map(lambda x: jnp.asarray(x[i]), batches)
+        _, up, _ = method.client_round(loss, states[i], broadcast, b_i)
+        seq_uploads.append(up)
+
+    # vmapped
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    _, vm_uploads, _ = jax.vmap(
+        lambda s, b: method.client_round(loss, s, broadcast, b)
+    )(stacked, jax.tree.map(jnp.asarray, batches))
+
+    for i in range(k):
+        for a, b in zip(jax.tree.leaves(seq_uploads[i]),
+                        jax.tree.leaves(jax.tree.map(lambda x: x[i], vm_uploads))):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,164 @@
+"""Pallas kernel validation (interpret=True on CPU): shape/dtype sweeps
+against the pure-jnp oracles + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.kernels.flash_gqa.kernel import flash_gqa_pallas
+from repro.kernels.flash_gqa.ops import flash_gqa
+from repro.kernels.flash_gqa.ref import flash_gqa_ref
+from repro.kernels.pfedsop_update.ops import pfedsop_update, pfedsop_update_tree
+from repro.kernels.pfedsop_update.ref import pfedsop_update_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.core import pfedsop as pf
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("shape", [(8, 128), (3, 17, 256), (1, 1, 512), (64, 384)])
+    def test_sweep(self, shape, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+        s = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32) * 0.2
+        out = rmsnorm(x, s, interpret=True)
+        ref = rmsnorm_ref(x, s)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+    @given(rows=hst.integers(1, 64), d_mult=hst.integers(1, 4))
+    @settings(max_examples=10, deadline=None)
+    def test_property_rows(self, rows, d_mult):
+        d = 128 * d_mult
+        x = jax.random.normal(jax.random.PRNGKey(rows), (rows, d), jnp.float32)
+        s = jnp.zeros((d,), jnp.float32)
+        out = rmsnorm(x, s, interpret=True)
+        # unit scale -> rows have (approx) unit RMS
+        rms = np.sqrt(np.mean(np.asarray(out) ** 2, -1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+class TestPFedSOPUpdate:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n", [7, 128, 1023, 4096, 50_000])
+    def test_sweep_vs_ref(self, n, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(n), 3)
+        x = jax.random.normal(ks[0], (n,), dtype)
+        di = jax.random.normal(ks[1], (n,), dtype)
+        dg = jax.random.normal(ks[2], (n,), dtype)
+        out, beta = pfedsop_update(x, di, dg, eta1=0.03, rho=0.9, lam=1.1, interpret=True)
+        ref, beta_r = pfedsop_update_ref(x, di, dg, 0.03, 0.9, 1.1)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+        np.testing.assert_allclose(float(beta), float(beta_r), rtol=1e-4)
+
+    def test_matches_core_pfedsop_personalize(self):
+        """Kernel path == the framework's pure-JAX personalize()."""
+        key = jax.random.PRNGKey(0)
+        tree = {
+            "w": jax.random.normal(key, (33, 17)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (9,)),
+        }
+        di = jax.tree.map(lambda x: x * 0.1, tree)
+        dg = jax.tree.map(lambda x: x * -0.05, tree)
+        cfg = pf.PFedSOPConfig(eta1=0.02, rho=1.3, lam=0.8)
+        expect, aux = pf.personalize(tree, di, dg, cfg)
+        got, beta = pfedsop_update_tree(tree, di, dg, eta1=0.02, rho=1.3, lam=0.8,
+                                        interpret=True)
+        np.testing.assert_allclose(float(beta), float(aux["beta"]), rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    @given(
+        n=hst.integers(4, 2000),
+        eta=hst.floats(1e-4, 1.0),
+        rho=hst.floats(0.05, 5.0),
+        lam=hst.floats(0.2, 5.0),
+        seed=hst.integers(0, 50),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_property_random(self, n, eta, rho, lam, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], (n,))
+        di = jax.random.normal(ks[1], (n,))
+        dg = jax.random.normal(ks[2], (n,))
+        out, beta = pfedsop_update(x, di, dg, eta1=eta, rho=rho, lam=lam, interpret=True)
+        ref, _ = pfedsop_update_ref(x, di, dg, eta, rho, lam)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+        assert 0.0 <= float(beta) <= 1.0
+
+
+class TestFlashGQA:
+    CASES = [
+        # (b, h, kv, s, d, window, softcap, dtype)
+        (1, 2, 1, 64, 32, None, None, jnp.float32),
+        (2, 4, 2, 128, 64, None, 50.0, jnp.float32),
+        (1, 8, 2, 256, 64, 48, None, jnp.float32),
+        (1, 4, 4, 128, 128, 32, 30.0, jnp.float32),
+        (2, 2, 1, 128, 64, None, None, jnp.bfloat16),
+        (1, 16, 2, 64, 256, None, None, jnp.float32),  # gemma3-like ratios
+    ]
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_sweep_vs_ref(self, case):
+        b, h, kv, s, d, win, cap, dtype = case
+        ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+        q = jax.random.normal(ks[0], (b, h, s, d), dtype)
+        k = jax.random.normal(ks[1], (b, kv, s, d), dtype)
+        v = jax.random.normal(ks[2], (b, kv, s, d), dtype)
+        out = flash_gqa_pallas(q, k, v, window=win, softcap=cap, bq=32, bk=32,
+                               interpret=True)
+        ref = flash_gqa_ref(q, k, v, window=win, softcap=cap)
+        tol = dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **tol
+        )
+
+    def test_block_size_invariance(self):
+        """Output must not depend on the BQ/BK tiling choice."""
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (1, 4, 128, 64))
+        k = jax.random.normal(ks[1], (1, 2, 128, 64))
+        v = jax.random.normal(ks[2], (1, 2, 128, 64))
+        outs = [
+            flash_gqa_pallas(q, k, v, window=40, bq=bq, bk=bk, interpret=True)
+            for bq, bk in [(16, 16), (32, 64), (128, 128), (64, 16)]
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                       rtol=2e-5, atol=2e-5)
+
+    def test_layout_wrapper(self):
+        """ops.flash_gqa (B,S,H,D layout) == ref on transposed layout."""
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (2, 64, 4, 32))
+        k = jax.random.normal(ks[1], (2, 64, 2, 32))
+        v = jax.random.normal(ks[2], (2, 64, 2, 32))
+        out = flash_gqa(q, k, v, bq=32, bk=32, interpret=True)
+        ref = jnp.swapaxes(
+            flash_gqa_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                          jnp.swapaxes(v, 1, 2)), 1, 2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+    def test_matches_model_attention_math(self):
+        """Kernel == the model layer's blockwise attention (same math)."""
+        from repro.configs import get_config
+        from repro.models import attention as am
+
+        cfg = get_config("gemma2-9b", reduced=True)
+        b, s = 1, 64
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, s, cfg.d_model), jnp.float32)
+        p = am.attn_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q, k, v = am._project_qkv(p, cfg, x, pos, 10_000.0)
+        ref = am.attention_fwd(p, cfg, x, pos, window=None, rope_base=10_000.0)
+        out = flash_gqa(q, k, v, softcap=cfg.attn_softcap, bq=32, bk=32, interpret=True)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)

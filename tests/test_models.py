@@ -1,0 +1,307 @@
+"""Model-stack tests: per-arch smoke (deliverable f), SSD-vs-recurrence
+oracle, MoE impl consistency, attention blockwise-vs-naive, decode-vs-
+prefill cache equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.models import transformer as tf
+from repro.models import cnn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.configs.base import LayerSpec, ModelConfig, uniform_pattern
+
+
+def make_batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.frontend == "audio_codebooks":
+        toks = jax.random.randint(key, (b, cfg.n_codebooks, s), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision_stub":
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+        pe = jax.random.normal(key, (b, cfg.n_patches, cfg.d_vision), jnp.float32)
+        return {"tokens": toks, "labels": toks, "patch_embeds": pe}
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+# ---------------------------------------------------------------------------
+# (f) per-architecture smoke: reduced config, one forward + one train step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.d_model <= 512 and (not cfg.n_experts or cfg.n_experts <= 4)
+    assert len(cfg.layers) <= 2
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: tf.lm_loss(p, cfg, batch)))(params)
+    assert np.isfinite(float(loss)), arch
+    for leaf in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32))), arch
+
+    # one SGD step moves the loss
+    new_params = jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - 0.1 * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads,
+    )
+    loss2 = float(tf.lm_loss(new_params, cfg, batch))
+    assert np.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_smoke_decode_shapes(arch):
+    cfg = get_config(arch, reduced=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    b = 2
+    caches = tf.init_caches(cfg, b, 16)
+    batch = make_batch(cfg, b=b, s=1)
+    batch.pop("labels")
+    if cfg.frontend == "vision_stub":
+        batch["patch_embeds"] = batch["patch_embeds"][:, :0]
+    logits, new_caches = tf.decode_step(params, cfg, batch, jnp.asarray(0, jnp.int32), caches)
+    if cfg.frontend == "audio_codebooks":
+        assert logits.shape == (b, 1, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan vs naive recurrence oracle
+# ---------------------------------------------------------------------------
+
+
+class TestSSD:
+    def _naive(self, xh, Bm, Cm, dt, A):
+        """Literal per-step recurrence h_t = e^{dt A} h + dt B x; y = C h."""
+        b, s, h, p = xh.shape
+        n = Bm.shape[-1]
+        hstate = np.zeros((b, h, p, n), np.float64)
+        ys = np.zeros((b, s, h, p), np.float64)
+        for t in range(s):
+            decay = np.exp(dt[:, t] * A[None, :])  # (B,H)
+            hstate = hstate * decay[:, :, None, None] + np.einsum(
+                "bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], xh[:, t]
+            )
+            ys[:, t] = np.einsum("bn,bhpn->bhp", Cm[:, t], hstate)
+        return ys, hstate
+
+    def test_chunked_matches_recurrence(self):
+        rng = np.random.RandomState(0)
+        b, s, h, p, n = 2, 64, 3, 4, 8
+        cfg = ModelConfig(name="t", family="ssm", source="t", ssm_chunk=16,
+                          ssm_state=n, ssm_head_dim=p)
+        xh = rng.randn(b, s, h, p).astype(np.float32)
+        Bm = rng.randn(b, s, n).astype(np.float32)
+        Cm = rng.randn(b, s, n).astype(np.float32)
+        dt = rng.uniform(0.01, 0.3, (b, s, h)).astype(np.float32)
+        A = -rng.uniform(0.1, 2.0, (h,)).astype(np.float32)
+        y, hT = ssm_mod.ssd_chunked(cfg, jnp.asarray(xh), jnp.asarray(Bm),
+                                    jnp.asarray(Cm), jnp.asarray(dt), jnp.asarray(A))
+        y_ref, h_ref = self._naive(xh, Bm, Cm, dt, A)
+        np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(hT), h_ref, rtol=2e-4, atol=2e-4)
+
+    def test_decode_matches_forward(self):
+        """Recurrent decode over a sequence == chunked forward, token-wise."""
+        cfg = get_config("mamba2-2.7b", reduced=True)
+        spec = cfg.pattern[0]
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        # single-layer apply through the ssm block directly
+        p_block = jax.tree.map(lambda x: x[0], params["pattern"])[0]["ssm"]
+        b, s = 2, 24
+        x = jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model), jnp.float32)
+        y_full = ssm_mod.ssm_forward(p_block, cfg, x)
+
+        cache = ssm_mod.ssm_init_cache(cfg, b, jnp.float32)
+        outs = []
+        for t in range(s):
+            y_t, cache = ssm_mod.ssm_decode(p_block, cfg, x[:, t : t + 1], cache)
+            outs.append(y_t)
+        y_dec = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(
+            np.asarray(y_dec), np.asarray(y_full), rtol=2e-3, atol=2e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# MoE: dense baseline vs capacity dispatch
+# ---------------------------------------------------------------------------
+
+
+class TestMoE:
+    def _cfg(self, e=4, k=2, cap=8.0):
+        return ModelConfig(
+            name="t", family="moe", source="t", n_layers=1, d_model=32,
+            n_experts=e, top_k=k, expert_ff=16, capacity_factor=cap,
+            pattern=(LayerSpec(kind="moe"),), n_rep=1,
+        )
+
+    def test_dense_equals_dispatch_at_high_capacity(self):
+        """With capacity >= N*k/E guaranteed, no token drops -> identical."""
+        cfg = self._cfg(cap=8.0)
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+        y_dense, aux_d = moe_mod.moe_dense(p, cfg, x)
+        y_disp, aux_s = moe_mod.moe_dispatch(p, cfg, x)
+        np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_disp),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(aux_d), float(aux_s), rtol=1e-5)
+
+    def test_grouped_dispatch_equals_dense_at_high_capacity(self):
+        cfg = self._cfg(cap=8.0)
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (3, 8, 32), jnp.float32)
+        y_dense, aux_d = moe_mod.moe_dense(p, cfg, x)
+        y_grp, aux_g = moe_mod.moe_dispatch_grouped(p, cfg, x)
+        np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_grp),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(float(aux_d), float(aux_g), rtol=1e-5)
+
+    def test_grouped_dispatch_capacity_is_per_group(self):
+        """Group capacity binds per batch row, not globally: a row that
+        routes everything to one expert drops, others are unaffected."""
+        cfg = self._cfg(e=2, k=1, cap=1.0)
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+        y, _ = moe_mod.moe_dispatch_grouped(p, cfg, x)
+        assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_dispatch_drops_overflow(self):
+        """Tiny capacity: output is finite and generally != dense."""
+        cfg = self._cfg(cap=0.25)
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+        y, _ = moe_mod.moe_dispatch(p, cfg, x)
+        assert np.all(np.isfinite(np.asarray(y)))
+
+    def test_router_weights_sum_to_one_over_topk(self):
+        cfg = self._cfg()
+        p = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (24, 32), jnp.float32)
+        w, idx, topw, aux = moe_mod._router(p, cfg, x)
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-5)
+        assert float(aux) >= 1.0 - 1e-5  # E * sum f_e P_e >= 1 (Cauchy-Schwarz)
+
+
+# ---------------------------------------------------------------------------
+# Attention: decode path == full forward (cache equivalence)
+# ---------------------------------------------------------------------------
+
+
+class TestAttentionCache:
+    @pytest.mark.parametrize("arch", ["gemma3-1b", "gemma2-9b", "granite-3-2b", "zamba2-2.7b"])
+    def test_decode_matches_prefill_logits(self, arch):
+        """Greedy decode logits at position t == full-forward logits at t."""
+        cfg = get_config(arch, reduced=True)
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        b, s = 1, 12
+        batch = make_batch(cfg, b=b, s=s, seed=3)
+        hidden, _ = tf.forward(params, cfg, batch)
+        full_logits = tf.lm_logits(params, cfg, hidden)  # (B,S,V)
+
+        caches = tf.init_caches(cfg, b, s)
+        toks = batch["tokens"]
+        for t in range(s):
+            db = {"tokens": toks[:, t : t + 1]}
+            if cfg.frontend == "vision_stub":
+                db["patch_embeds"] = batch["patch_embeds"][:, :0]
+            logits, caches = tf.decode_step(
+                params, cfg, db, jnp.asarray(t, jnp.int32), caches
+            )
+            np.testing.assert_allclose(
+                np.asarray(logits[:, 0], np.float32),
+                np.asarray(full_logits[:, t], np.float32),
+                rtol=5e-3, atol=5e-3,
+            )
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+class TestPrefillHandoff:
+    @pytest.mark.parametrize("arch", ["gemma3-1b", "granite-3-2b", "mamba2-2.7b",
+                                      "zamba2-2.7b", "olmoe-1b-7b"])
+    def test_prefill_caches_continue_decode(self, arch):
+        """prefill_with_caches(prompt) + decode_step(next) must equal
+        running the full sequence through forward()."""
+        cfg = get_config(arch, reduced=True)
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        b, s = 1, 16
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, s + 1), 0, cfg.vocab_size)
+
+        # oracle: full forward over s+1 tokens, logits at the last position
+        full = {"tokens": toks}
+        hidden, _ = tf.forward(params, cfg, full)
+        want = tf.lm_logits(params, cfg, hidden[:, -1:, :])
+
+        # prefill s tokens -> decode token s
+        logits_p, caches = tf.prefill_with_caches(params, cfg, {"tokens": toks[:, :s]})
+        got, _ = tf.decode_step(params, cfg, {"tokens": toks[:, s : s + 1]},
+                                jnp.asarray(s, jnp.int32), caches)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=5e-3, atol=5e-3,
+        )
+        # the prefill's own last-token logits match forward at position s-1
+        np.testing.assert_allclose(
+            np.asarray(logits_p, np.float32),
+            np.asarray(tf.lm_logits(params, cfg, hidden[:, s - 1 : s, :]), np.float32),
+            rtol=5e-3, atol=5e-3,
+        )
+
+
+class TestKVQuant:
+    def test_roundtrip_error_bound(self):
+        from repro.models.attention import _quantize
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 2, 8, 64)) * 5.0
+        q, s = _quantize(x)
+        assert q.dtype == jnp.int8
+        deq = q.astype(jnp.float32) * np.asarray(s, np.float32)[..., None]
+        rel = np.max(np.abs(deq - np.asarray(x))) / np.max(np.abs(np.asarray(x)))
+        assert rel < 0.01  # 127-level symmetric quant
+
+    def test_quantized_decode_close_to_exact(self):
+        """int8-cache decode logits track the bf16-cache logits closely."""
+        cfg = get_config("granite-3-2b", reduced=True)
+        params = tf.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (1, 10), 0, cfg.vocab_size)
+        outs = {}
+        for quant in [False, True]:
+            c = cfg.replace(kv_quant=quant)
+            caches = tf.init_caches(c, 1, 10)
+            for t in range(10):
+                logits, caches = tf.decode_step(
+                    params, c, {"tokens": toks[:, t : t + 1]},
+                    jnp.asarray(t, jnp.int32), caches)
+            outs[quant] = np.asarray(logits, np.float32)
+        # same argmax, small logit drift
+        assert np.argmax(outs[False]) == np.argmax(outs[True])
+        drift = np.max(np.abs(outs[True] - outs[False]))
+        assert drift < 0.15 * np.max(np.abs(outs[False])), drift
+
+
+class TestCNN:
+    def test_forward_and_learning(self):
+        from repro.configs.resnet_cifar import SMALL_CNN
+
+        cfg = SMALL_CNN
+        params = cnn.init_params(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, 16, 3), jnp.float32)
+        y = jax.random.randint(jax.random.PRNGKey(2), (8,), 0, cfg.n_classes)
+        batch = {"images": x, "labels": y}
+        loss0 = float(cnn.loss_fn(params, cfg, batch))
+        g = jax.grad(cnn.loss_fn)(params, cfg, batch)
+        params2 = jax.tree.map(lambda p, gi: p - 0.1 * gi, params, g)
+        loss1 = float(cnn.loss_fn(params2, cfg, batch))
+        assert np.isfinite(loss0) and loss1 < loss0

@@ -1,0 +1,69 @@
+"""Roofline machinery unit tests (HLO parsing + analytic FLOPs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.roofline import (
+    active_param_count,
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+
+HLO_SNIPPET = """
+HloModule test
+ENTRY %main {
+  %ar = bf16[4,128]{1,0} all-reduce(bf16[4,128]{1,0} %x), replica_groups={}
+  %ag.1 = f32[16,256]{1,0} all-gather(f32[2,256]{1,0} %y), dimensions={0}
+  %ars = (f32[8]{0}, f32[8]{0}) all-reduce-start(f32[8]{0} %a, f32[8]{0} %b)
+  %ard = f32[8]{0} all-reduce-done(%ars)
+  %cp = u32[64]{0} collective-permute(u32[64]{0} %z), source_target_pairs={{0,1}}
+  %normal = f32[32,32]{1,0} dot(f32[32,32]{1,0} %p, f32[32,32]{1,0} %q)
+}
+"""
+
+
+class TestCollectiveParse:
+    def test_census(self):
+        out = collective_bytes_from_hlo(HLO_SNIPPET)
+        assert out["all-reduce"]["count"] == 2  # plain + -start (not -done)
+        assert out["all-reduce"]["bytes"] == 4 * 128 * 2 + 2 * 8 * 4
+        assert out["all-gather"]["bytes"] == 16 * 256 * 4
+        assert out["collective-permute"]["bytes"] == 64 * 4
+        assert "dot" not in out
+
+    def test_roofline_terms_dominance(self):
+        record = {
+            "cost_analysis": {"flops": 197e12, "bytes accessed": 819e9 * 2},
+            "collectives": {"all-reduce": {"bytes": 50e9 * 0.5, "count": 1}},
+        }
+        rl = roofline_terms(record, n_devices=4)
+        np.testing.assert_allclose(rl["compute_s"], 1.0)
+        np.testing.assert_allclose(rl["memory_s"], 2.0)
+        np.testing.assert_allclose(rl["collective_s"], 0.5)
+        assert rl["dominant"] == "memory"
+
+
+class TestModelFlops:
+    def test_active_params_moe_counts_topk_only(self):
+        """MoE active params use top_k experts, not all E."""
+        o = get_config("olmoe-1b-7b")
+        n_active = active_param_count(o)
+        # FFN active share: 3*d*ff*k = 3*2048*1024*8 per layer
+        ffn = 3 * 2048 * 1024 * 8
+        attn = 2048 * 16 * 128 * 2 + 2 * 2048 * 16 * 128
+        per_layer = ffn + attn + 2048 * 64  # + router
+        np.testing.assert_allclose(n_active, per_layer * 16, rtol=1e-6)
+
+    def test_dense_flops_scale_with_tokens(self):
+        g = get_config("granite-3-2b")
+        f_train = model_flops(g, INPUT_SHAPES["train_4k"])
+        f_decode = model_flops(g, INPUT_SHAPES["decode_32k"])
+        # train: 6*N*(256*4096) tokens; decode: 2*N*128 tokens
+        assert f_train / f_decode == (6 * 256 * 4096) / (2 * 128)
+
+    def test_ssm_params_positive(self):
+        m = get_config("mamba2-2.7b")
+        n = active_param_count(m)
+        assert 2e9 < n < 4e9  # "2.7b"-class
