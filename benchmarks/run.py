@@ -16,6 +16,11 @@ Mapping to the paper (Sen & Mohan 2025):
   kernels  pfedsop_update / flash_gqa / rmsnorm microbench (interpret mode
            on CPU: validates + times the kernel bodies; TPU wall-times come
            from the roofline terms, not this box)
+  engine   federation-engine throughput: rounds/sec for the vmap vs the
+           shard_map backend across federation sizes (DESIGN.md §3; on a
+           1-device box both run the same program - run under
+           XLA_FLAGS=--xla_force_host_platform_device_count=N to see the
+           multi-shard split)
   roofline summary table from experiments/dryrun/*.json artifacts
 
 Output: CSV lines ``name,us_per_call,derived`` + a human table; artifacts
@@ -75,12 +80,13 @@ def _data(partition, seed=0, samples=3000, classes=10, clients=10):
     return FederatedData.from_partition(images, labels, parts, seed=seed)
 
 
-def _run(method, data, rounds, seed=0, clients=10):
+def _run(method, data, rounds, seed=0, clients=10, backend="vmap",
+         participation=0.4):
     loss = lambda p, b: cnn.loss_fn(p, CFG, b)
     acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
     params = cnn.init_params(jax.random.PRNGKey(seed), CFG)
-    run_cfg = FLRunConfig(n_clients=clients, participation=0.4, rounds=rounds,
-                          batch=25, seed=seed)
+    run_cfg = FLRunConfig(n_clients=clients, participation=participation,
+                          rounds=rounds, batch=25, seed=seed, backend=backend)
     fed = Federation(method, loss, acc, params, data, run_cfg)
     return fed.run()
 
@@ -207,6 +213,43 @@ def bench_kernels():
     return out
 
 
+def bench_engine(rounds):
+    """Federation-engine throughput: rounds/sec per backend x federation size.
+
+    The per-round client phase is the scaling axis the engine shards
+    (ISSUE: second-order FL wins by cutting rounds, so each round must scale
+    across devices at realistic federation sizes).  Equal-seed backends run
+    the same sampled rounds, so rounds/sec is directly comparable.
+    """
+    print("\n== engine: rounds/sec, vmap vs shard_map ==")
+    n_dev = len(jax.devices())
+    out = {}
+    r = max(3, rounds // 3)
+    # participation 0.5 -> K' = 4, 8, 16: power-of-two shard counts, so the
+    # recommended 4-device run actually splits every federation size
+    for clients in [8, 16, 32]:
+        data = _data("dirichlet", clients=clients, samples=200 * clients)
+        out[clients] = {}
+        for backend in ["vmap", "shard_map"]:
+            h = _run(_build("pfedsop"), data, r, clients=clients,
+                     backend=backend, participation=0.5)
+            t = float(np.mean(h["round_time"][1:]))  # skip compile round
+            rps = 1.0 / max(t, 1e-9)
+            out[clients][backend] = {
+                "rounds_per_sec": rps,
+                "shards": h["engine"].get("shards", 1),
+            }
+            print(f"bench,engine/{backend}/k{clients},{t*1e6:.0f},"
+                  f"rounds_per_sec={rps:.3f},shards={h['engine'].get('shards', 1)}")
+    print(f"({n_dev} local device(s))")
+    print(f"{'clients':>8} {'vmap r/s':>9} {'shard_map r/s':>14} {'shards':>7}")
+    for clients, row in out.items():
+        print(f"{clients:>8} {row['vmap']['rounds_per_sec']:>9.3f} "
+              f"{row['shard_map']['rounds_per_sec']:>14.3f} "
+              f"{row['shard_map']['shards']:>7}")
+    return out
+
+
 def bench_roofline():
     """Summarise the dry-run artifacts (§Roofline table)."""
     print("\n== roofline: dry-run artifact summary ==")
@@ -234,6 +277,7 @@ BENCHES = {
     "table3": bench_table3,
     "table4": bench_table4,
     "figures": bench_figures,
+    "engine": bench_engine,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
 }

@@ -76,6 +76,11 @@ def main():
     ap.add_argument("--mu", type=float, default=0.1)
     ap.add_argument("--ditto-lam", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=["vmap", "shard_map"], default="vmap",
+                    help="federation engine backend (DESIGN.md §3); shard_map "
+                         "splits the participating clients across local devices")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard_map only: device-shard count (0 = auto)")
     ap.add_argument("--model", choices=["small", "resnet9"], default="small")
     ap.add_argument("--paper-scale", action="store_true",
                     help="K=100 clients, 20%% participation, 100 rounds (slow on CPU)")
@@ -108,6 +113,7 @@ def main():
     run_cfg = FLRunConfig(
         n_clients=args.clients, participation=args.participation,
         rounds=args.rounds, batch=args.batch, seed=args.seed,
+        backend=args.backend, shards=args.shards,
     )
 
     out_dir = Path("experiments/fl")

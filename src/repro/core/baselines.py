@@ -1,24 +1,19 @@
 """Baseline FL methods from the paper's comparison set (Table II).
 
-Every method implements the same traceable interface so the runtime in
-``repro.fl`` can vmap it over clients:
-
-  init_client(params)                        -> client_state (pytree)
-  init_server(params)                        -> broadcast (what the server sends)
-  client_round(loss_fn, state, broadcast, batches, cfg-like) ->
-        (new_state, upload, metrics)
-  server_update(broadcast, uploads_stacked)  -> new broadcast
-  eval_params(state, broadcast)              -> params used for local test acc
+Every method implements the ``FLMethod`` interface below — THE definitive
+statement of the method contract consumed by the federation engine
+(``repro.fl.engine``; architecture in DESIGN.md §2/§3).
 
 Methods:  FedAvg, FedProx (mu), FedAvg-FT, FedProx-FT, Ditto (lam),
-FedRep (head/body split), LocalOnly, and the pFedSOP adapter around
-``repro.core.pfedsop``.  All local training is plain SGD (Algorithm 2 of
-the paper; same for the baselines, matching the paper's setup).
+FedRep (head/body split), LocalOnly, SCAFFOLD, FedExP, and the pFedSOP
+adapter around ``repro.core.pfedsop``.  All local training is plain SGD
+(Algorithm 2 of the paper; same for the baselines, matching the paper's
+setup in PAPER.md Sec. V).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +22,55 @@ from repro.core import pfedsop as pf
 from repro.utils.pytree import tree_scale, tree_sub, tree_zeros_like
 
 Pytree = Any
+
+
+@runtime_checkable
+class FLMethod(Protocol):
+    """The traceable FL-method contract (documented once, here).
+
+    A method is a frozen, hashable object (so it can be closed over by a
+    jitted round function) exposing five functions.  Everything except the
+    two ``init_*`` hooks is traced — it must be vmap/shard_map-safe: no
+    python control flow on traced values, no shape-dependent branching
+    (use ``jax.lax`` / masking instead, cf. ``tree_where`` in pfedsop).
+
+    init_client(params) -> client_state
+        Per-client persistent state from the shared random init.  The
+        runtime stacks it on a leading K axis (one pytree for the whole
+        federation, DESIGN.md §3).
+    init_server(params) -> broadcast
+        What the server sends every round (replicated across shards).
+    client_round(loss_fn, state, broadcast, batches) ->
+            (new_state, upload, metrics)
+        One client's local phase for one round: ``batches`` has a leading
+        local-iteration axis T (scanned).  ``metrics`` must contain at
+        least {"loss": scalar}.  For pFedSOP this is Algorithm 3 lines
+        4-11 / Eqs. 10-19 of PAPER.md.
+    server_update(broadcast, uploads) -> new_broadcast
+        Aggregation over the stacked upload axis (leading axis of every
+        leaf).  Under the shard_map backend that axis is device-sharded,
+        so reductions over it compile to cross-shard psums (Eq. 13 of
+        PAPER.md for pFedSOP's mean).
+    eval_params(state, broadcast) -> params
+        The parameters a client deploys for local test accuracy
+        (personalized methods return per-client params; FedAvg-family
+        return the broadcast model).
+
+    ``repro.fl.runtime.validate_method`` checks structural conformance at
+    federation construction time.
+    """
+
+    name: str
+
+    def init_client(self, params: Pytree) -> Pytree: ...
+
+    def init_server(self, params: Pytree) -> Pytree: ...
+
+    def client_round(self, loss_fn, state, broadcast, batches): ...
+
+    def server_update(self, broadcast, uploads): ...
+
+    def eval_params(self, state, broadcast) -> Pytree: ...
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,7 @@
 """pFedSOP: personalized federated learning with second-order optimization.
 
-The paper's contribution, as pure-JAX pytree math (Sen & Mohan, 2025):
+The paper's contribution, as pure-JAX pytree math (Sen & Mohan, 2025;
+abstract and equation numbering in PAPER.md):
 
 per client i at round t
   1. beta   = gompertz(angle(delta_i(t-1), delta(t-1)))          (Eq. 14)
@@ -10,6 +11,11 @@ per client i at round t
   5. T-step local SGD from x_it; delta_it = (x0 - xT)/eta2       (Eq. 11)
 server
   6. delta_t = mean_i delta_it                                   (Eq. 13)
+
+This module is pure math for ONE client; the federation-facing adapter
+(``repro.core.baselines.PFedSOP``) wraps it in the ``FLMethod`` interface
+documented on ``repro.core.baselines.FLMethod``, and the engine backends
+in ``repro.fl.engine`` run it across clients (DESIGN.md §2/§3).
 
 Everything operates on *pytrees* of parameters so the same code serves the
 paper-faithful CNN reproduction, the 10 assigned transformer-family

@@ -1,2 +1,14 @@
-"""FL runtime: vmap'd single-host simulation + distributed round logic."""
-from repro.fl.runtime import Federation, FLRunConfig  # noqa: F401
+"""FL runtime: backend-pluggable federation engine (vmap / shard_map).
+
+``Federation`` drives the round loop; the engine backend (DESIGN.md §3)
+decides where the per-client phase runs.  See README.md for the repo map.
+"""
+from repro.fl.engine import (  # noqa: F401
+    BACKENDS,
+    FederationEngine,
+    ShardMapBackend,
+    VmapBackend,
+    make_engine,
+    resolve_shards,
+)
+from repro.fl.runtime import Federation, FLRunConfig, validate_method  # noqa: F401

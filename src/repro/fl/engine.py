@@ -1,0 +1,189 @@
+"""Backend-pluggable federation engine (DESIGN.md §3).
+
+The round logic in ``repro.fl.runtime`` is backend-agnostic: a
+``FederationEngine`` decides *where* the per-client work of one round runs.
+Two interchangeable backends ship today:
+
+  VmapBackend      single host, single device: the K' participating clients
+                   are one ``jax.vmap`` over the stacked client axis (the
+                   seed behaviour, and the reference semantics).
+  ShardMapBackend  multi-device: the participating-client axis is sharded
+                   across a 1-D ``jax.sharding.Mesh`` ("clients" axis) and
+                   each device vmaps its local slice inside
+                   ``jax.experimental.shard_map``.  Uploads/metrics/accs
+                   come back as global arrays sharded on the client axis, so
+                   the server mean over clients (Eq. 13) compiles to a
+                   per-shard partial sum + cross-shard psum — the
+                   round-boundary all-reduce of DESIGN.md §3.
+
+Both backends run the *same* traced client function on the *same* stacked
+operands, so they are numerically equivalent on the same seed: identical on
+a 1-device mesh, and equal up to float-reduction order of the cross-shard
+aggregation on multi-device meshes (asserted in tests/test_engine.py).
+
+The client function contract is the ``FLMethod`` interface documented in
+``repro.core.baselines``; the engine only requires that it is traceable
+(vmap/shard_map-safe: no python control flow on traced values).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
+
+try:  # moved out of jax.experimental in newer jax releases
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import make_client_mesh
+from repro.launch.sharding import client_stacked_pspecs
+
+Pytree = Any
+CLIENT_AXIS = "clients"
+
+
+@runtime_checkable
+class FederationEngine(Protocol):
+    """Executes the data-parallel (per-client) phases of one FL round.
+
+    ``one_client``/``one_eval`` are traced functions of ONE client's slice
+    (no leading client axis); every other argument carries a leading
+    stacked-client axis except ``broadcast``, which is replicated.
+    """
+
+    name: str
+
+    def client_phase(
+        self,
+        one_client: Callable[[Pytree, Pytree, Pytree], Any],
+        gathered_states: Pytree,
+        broadcast: Pytree,
+        batches: Pytree,
+    ) -> Any:
+        """(states, broadcast, batches) -> (new_states, uploads, metrics)."""
+        ...
+
+    def eval_phase(
+        self,
+        one_eval: Callable[[Pytree, Pytree, Pytree], Any],
+        states: Pytree,
+        broadcast: Pytree,
+        test_sets: Pytree,
+    ) -> Any:
+        """(states, broadcast, test_sets) -> per-client accuracies (K',)."""
+        ...
+
+    def describe(self) -> dict:
+        """Static metadata for logs/benchmarks (backend, shards, ...)."""
+        ...
+
+
+class VmapBackend:
+    """Single-host reference backend: one jax.vmap over the client axis."""
+
+    name = "vmap"
+
+    def client_phase(self, one_client, gathered_states, broadcast, batches):
+        return jax.vmap(one_client, in_axes=(0, None, 0))(
+            gathered_states, broadcast, batches
+        )
+
+    def eval_phase(self, one_eval, states, broadcast, test_sets):
+        return jax.vmap(one_eval, in_axes=(0, None, 0))(
+            states, broadcast, test_sets
+        )
+
+    def describe(self):
+        return {"backend": self.name, "shards": 1}
+
+
+def resolve_shards(kprime: int, n_devices: int, requested: int = 0) -> int:
+    """Shard count for a K'-client round on ``n_devices`` local devices.
+
+    The stacked-client axis is split evenly (no padding — padded dummy
+    clients would change the server mean, breaking backend equivalence), so
+    the shard count must divide K'.  ``requested=0`` picks the largest
+    divisor of K' that fits the device count; an explicit request is
+    validated strictly.
+    """
+    if requested < 0:
+        raise ValueError(f"shards must be >= 0 (0 = auto), got {requested}")
+    if requested:
+        if requested > n_devices:
+            raise ValueError(
+                f"requested {requested} shards but only {n_devices} devices"
+            )
+        if kprime % requested:
+            raise ValueError(
+                f"shards={requested} must divide the {kprime} participating "
+                "clients per round (no padding; see DESIGN.md §3)"
+            )
+        return requested
+    for n in range(min(kprime, n_devices), 0, -1):
+        if kprime % n == 0:
+            return n
+    return 1
+
+
+class ShardMapBackend:
+    """Shards the participating-client axis across a 1-D device mesh.
+
+    Each device runs ``jax.vmap`` over its K'/shards local clients inside
+    ``shard_map``; outputs stay sharded on the client axis so downstream
+    cross-client reductions (the server aggregation) become cross-shard
+    collectives instead of single-device loops.
+    """
+
+    name = "shard_map"
+
+    def __init__(self, kprime: int, shards: int = 0):
+        self.kprime = kprime
+        self.shards = resolve_shards(kprime, len(jax.devices()), shards)
+        self.mesh = make_client_mesh(self.shards, axis_name=CLIENT_AXIS)
+
+    def _sharded(self, fn, *in_trees, broadcast):
+        specs = tuple(client_stacked_pspecs(t, CLIENT_AXIS) for t in in_trees)
+
+        def local(broadcast_, *local_trees):
+            return jax.vmap(fn, in_axes=(0, None) + (0,) * (len(local_trees) - 1))(
+                local_trees[0], broadcast_, *local_trees[1:]
+            )
+
+        return shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(),) + specs,
+            out_specs=P(CLIENT_AXIS),
+        )(broadcast, *in_trees)
+
+    def client_phase(self, one_client, gathered_states, broadcast, batches):
+        return self._sharded(one_client, gathered_states, batches, broadcast=broadcast)
+
+    def eval_phase(self, one_eval, states, broadcast, test_sets):
+        return self._sharded(one_eval, states, test_sets, broadcast=broadcast)
+
+    def describe(self):
+        return {
+            "backend": self.name,
+            "shards": self.shards,
+            "devices": [str(d) for d in self.mesh.devices.flat],
+        }
+
+
+BACKENDS = ("vmap", "shard_map")
+
+
+def make_engine(backend: str, kprime: int, shards: int = 0) -> FederationEngine:
+    """Engine factory used by ``Federation`` (selected via FLRunConfig)."""
+    if backend == "vmap":
+        if shards:
+            raise ValueError(
+                "shards is only meaningful with backend='shard_map' "
+                f"(got shards={shards} with backend='vmap')"
+            )
+        return VmapBackend()
+    if backend == "shard_map":
+        return ShardMapBackend(kprime, shards)
+    raise ValueError(f"unknown FL backend {backend!r}; choose from {BACKENDS}")

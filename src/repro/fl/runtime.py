@@ -1,18 +1,21 @@
-"""Single-host FL simulation backend.
+"""Federation runtime: round loop + history, backend-agnostic.
 
 The federation is one SPMD program: per-client states live as stacked
 pytrees (leading K axis); each round the K' participating clients are
-gathered, ``jax.vmap`` runs the method's ``client_round`` across them in
-parallel, uploads are aggregated by the method's ``server_update``, and the
-states are scattered back.  The whole round (client phase + aggregation +
-evaluation) is one jitted function - client_ids are a traced argument so
-the round function compiles exactly once.
+gathered, a ``FederationEngine`` backend (``repro.fl.engine``) runs the
+method's ``client_round`` across them — ``jax.vmap`` on one device, or
+``shard_map`` over a client-axis device mesh — uploads are aggregated by
+the method's ``server_update``, and the states are scattered back.  The
+whole round (client phase + aggregation + evaluation) is one jitted
+function - client_ids are a traced argument so the round function compiles
+exactly once per federation.
 
 This is numerically identical to the paper's sequential-client loop (same
 initialization, same per-client sampling; verified in
 tests/test_fl_runtime.py) but runs K' clients as one vectorized program -
 the JAX-idiomatic replacement for a parameter-server process pool
-(DESIGN.md §3/§8).
+(DESIGN.md §3/§8).  The method object must satisfy the ``FLMethod``
+interface documented in ``repro.core.baselines``.
 """
 from __future__ import annotations
 
@@ -24,13 +27,37 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.baselines import FLMethod
 from repro.data.federated import FederatedData
+from repro.fl.engine import make_engine
 
 Pytree = Any
+
+# derived from the Protocol so the contract stays single-sourced
+_METHOD_INTERFACE = tuple(
+    a for a, v in vars(FLMethod).items() if callable(v) and not a.startswith("_")
+)
+
+
+def validate_method(method) -> None:
+    """Fail fast (with the contract spelled out) on a malformed method.
+
+    The full interface is documented once on ``repro.core.baselines.FLMethod``.
+    """
+    missing = [a for a in _METHOD_INTERFACE if not callable(getattr(method, a, None))]
+    if missing or not isinstance(getattr(method, "name", None), str):
+        raise TypeError(
+            f"{type(method).__name__} does not implement the FLMethod interface "
+            f"(missing/uncallable: {missing or ['name']}); see "
+            "repro.core.baselines.FLMethod and DESIGN.md §2"
+        )
 
 
 @dataclass(frozen=True)
 class FLRunConfig:
+    """Federation-level run parameters (method hyperparameters live on the
+    method object itself, e.g. ``PFedSOPConfig``)."""
+
     n_clients: int = 100
     participation: float = 0.2  # 20% per round (paper Sec. V-B4)
     rounds: int = 100
@@ -38,9 +65,18 @@ class FLRunConfig:
     local_iters: int = 0  # 0 = one-local-epoch equivalent (mean client size)
     seed: int = 0
     eval_every: int = 1
+    backend: str = "vmap"  # one of repro.fl.engine.BACKENDS
+    shards: int = 0  # shard_map only; 0 = auto (largest divisor of K')
 
 
 class Federation:
+    """Drives ``rounds`` FL rounds of ``method`` over ``data``.
+
+    Sampling (client participation + local SGD batches) is host-side numpy
+    seeded by ``run_cfg.seed`` and therefore identical across backends;
+    backend choice only changes where the traced client phase executes.
+    """
+
     def __init__(
         self,
         method,
@@ -50,6 +86,7 @@ class Federation:
         data: FederatedData,
         run_cfg: FLRunConfig,
     ):
+        validate_method(method)
         self.method = method
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
@@ -61,6 +98,7 @@ class Federation:
         assert data.n_clients == k, (data.n_clients, k)
         self.kprime = max(1, int(round(run_cfg.participation * k)))
         self.T = run_cfg.local_iters or data.local_iters(run_cfg.batch)
+        self.engine = make_engine(run_cfg.backend, self.kprime, run_cfg.shards)
 
         # same init for every client (paper: "same initialization for all
         # methods"); states stacked on a leading K axis
@@ -75,22 +113,28 @@ class Federation:
 
     def _make_round_fn(self):
         method, loss_fn, acc_fn = self.method, self.loss_fn, self.acc_fn
+        engine = self.engine
+
+        def one_client(state, broadcast, batch_seq):
+            return method.client_round(loss_fn, state, broadcast, batch_seq)
+
+        def one_eval(state, broadcast, test):
+            params = method.eval_params(state, broadcast)
+            return acc_fn(params, test)
 
         def round_fn(client_states, broadcast, client_ids, batches, test_sets):
             gathered = jax.tree.map(lambda x: x[client_ids], client_states)
 
-            def one_client(state, batch_seq):
-                return method.client_round(loss_fn, state, broadcast, batch_seq)
+            new_states, uploads, metrics = engine.client_phase(
+                one_client, gathered, broadcast, batches
+            )
 
-            new_states, uploads, metrics = jax.vmap(one_client)(gathered, batches)
-
+            # server aggregation over the (possibly cross-shard) client axis
             new_broadcast = method.server_update(broadcast, uploads)
 
-            def one_eval(state, test):
-                params = method.eval_params(state, broadcast)
-                return acc_fn(params, test)
-
-            accs = jax.vmap(one_eval)(new_states, test_sets)
+            # personalized eval against the pre-update broadcast (the model a
+            # client would deploy this round)
+            accs = engine.eval_phase(one_eval, new_states, broadcast, test_sets)
 
             client_states = jax.tree.map(
                 lambda full, new: full.at[client_ids].set(new), client_states, new_states
@@ -124,10 +168,11 @@ class Federation:
             history["round_time"].append(dt)
             if verbose and (t % 10 == 0 or t == self.cfg.rounds - 1):
                 print(
-                    f"[{self.method.name}] round {t:4d} loss={m['loss']:.4f} "
-                    f"acc={m['acc']:.4f} ({dt:.2f}s)"
+                    f"[{self.method.name}/{self.engine.name}] round {t:4d} "
+                    f"loss={m['loss']:.4f} acc={m['acc']:.4f} ({dt:.2f}s)"
                 )
         history["mean_best_acc"] = float(np.mean(self.best_acc[self.best_acc > 0]))
+        history["engine"] = self.engine.describe()
         return history
 
 

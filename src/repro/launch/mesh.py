@@ -32,3 +32,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Degenerate 1x1 mesh for CPU smoke runs of the sharded step code."""
     return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def make_client_mesh(n_shards: int, axis_name: str = "clients"):
+    """1-D mesh over the FL participating-client axis (DESIGN.md §3).
+
+    Used by ``repro.fl.engine.ShardMapBackend`` to split a round's K'
+    clients across local devices; the single-axis layout keeps the client
+    phase embarrassingly parallel and confines cross-device traffic to the
+    round-boundary aggregation psum.
+    """
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        raise RuntimeError(
+            f"client mesh needs {n_shards} devices, found {len(devices)} - "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "for CPU multi-device simulation"
+        )
+    return jax.make_mesh((n_shards,), (axis_name,), devices=devices[:n_shards])

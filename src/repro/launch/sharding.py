@@ -186,6 +186,17 @@ def batch_pspecs(batch_tree, dsize: int, batch_axis_index: int = 0,
     return jax.tree_util.tree_map_with_path(rule, batch_tree)
 
 
+def client_stacked_pspecs(tree, axis_name: str = "clients"):
+    """Full-rank specs sharding the leading stacked-client axis of every leaf.
+
+    The FL engine stacks per-client state/batch pytrees on a leading K'
+    axis (DESIGN.md §3); this returns ``P(axis_name, None, ...)`` per leaf
+    for use as shard_map in/out specs — the ``replicated`` rule with the
+    client axis sharded.
+    """
+    return replicated(tree, client=True, client_axis=axis_name)
+
+
 def replicated(tree, client: bool = False, client_axis: Optional[str] = None):
     def rule(leaf):
         spec = [None] * len(leaf.shape)

@@ -1,0 +1,43 @@
+"""Optional-hypothesis shim: property tests skip cleanly when absent.
+
+The tier-1 suite must collect and run on a bare interpreter (no dev
+deps installed).  Test modules import ``given``/``settings``/``hst`` from
+here instead of ``hypothesis`` directly:
+
+    from hyp_compat import given, settings, hst
+
+With hypothesis installed (``pip install -r requirements-dev.txt``) these
+are the real objects and the property tests run in full.  Without it,
+``given`` rewrites the test into a zero-fixture function that calls
+``pytest.skip`` at run time, ``settings`` is an identity decorator, and
+``hst`` is a stub whose strategy constructors return inert placeholders
+(they are only ever passed to the stub ``given``).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipped(*args, **kwargs):
+                pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    hst = _StrategyStub()

@@ -2,7 +2,7 @@
 + federated container + synthetic generators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hyp_compat import given, hst, settings  # optional-hypothesis shim
 
 from repro.data import (
     FederatedData,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hyp_compat import given, hst, settings  # optional-hypothesis shim
 
 from repro.kernels.flash_gqa.kernel import flash_gqa_pallas
 from repro.kernels.flash_gqa.ops import flash_gqa

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+from hyp_compat import given, hst, settings  # optional-hypothesis shim
 
 from repro.core import pfedsop as pf
 from repro.utils import pytree as pt
