@@ -21,6 +21,10 @@ Mapping to the paper (Sen & Mohan 2025):
            1-device box both run the same program - run under
            XLA_FLAGS=--xla_force_host_platform_device_count=N to see the
            multi-shard split)
+  pfedsop-update  round-start-update impl shootout (DESIGN.md §9):
+           rounds/sec for the pytree reference vs the fused Pallas kernel
+           under both backends, with a per-backend parity assertion;
+           --interpret forces the interpreter kernel (automatic off-TPU)
   roofline summary table from experiments/dryrun/*.json artifacts
 
 Output: CSV lines ``name,us_per_call,derived`` + a human table; artifacts
@@ -81,12 +85,13 @@ def _data(partition, seed=0, samples=3000, classes=10, clients=10):
 
 
 def _run(method, data, rounds, seed=0, clients=10, backend="vmap",
-         participation=0.4):
+         participation=0.4, update_impl=""):
     loss = lambda p, b: cnn.loss_fn(p, CFG, b)
     acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
     params = cnn.init_params(jax.random.PRNGKey(seed), CFG)
     run_cfg = FLRunConfig(n_clients=clients, participation=participation,
-                          rounds=rounds, batch=25, seed=seed, backend=backend)
+                          rounds=rounds, batch=25, seed=seed, backend=backend,
+                          update_impl=update_impl)
     fed = Federation(method, loss, acc, params, data, run_cfg)
     return fed.run()
 
@@ -250,6 +255,52 @@ def bench_engine(rounds):
     return out
 
 
+def bench_pfedsop_update(rounds, interpret=False):
+    """Round-start-update impl shootout: rounds/sec, reference vs fused
+    kernel (DESIGN.md §9), under both engine backends.
+
+    On CPU (or with --interpret) the kernel impl runs the Pallas
+    interpreter — a correctness-path timing that keeps the bench runnable
+    in CI; the honest kernel wall-time needs a TPU, where the same flag
+    resolves to the compiled Mosaic kernel.  Parity (max |loss diff| vs
+    the reference history on the same seed) is checked per backend so a
+    broken kernel path fails loudly here, not just in the test suite.
+    """
+    print("\n== pfedsop-update: rounds/sec per impl x backend ==")
+    kernel_impl = ("kernel_interpret"
+                   if interpret or jax.default_backend() != "tpu" else "kernel")
+    data = _data("dirichlet", clients=8, samples=1600)
+    r = max(3, rounds // 3)
+    out = {"kernel_impl": kernel_impl, "backends": {}}
+    for backend in ["vmap", "shard_map"]:
+        out["backends"][backend] = {}
+        ref_hist = None
+        for impl in ["reference", kernel_impl]:
+            h = _run(_build("pfedsop"), data, r, clients=8, backend=backend,
+                     participation=0.5, update_impl=impl)
+            t = float(np.mean(h["round_time"][1:]))  # skip compile round
+            rps = 1.0 / max(t, 1e-9)
+            if impl == "reference":
+                ref_hist = h
+                drift = 0.0
+            else:
+                drift = float(np.max(np.abs(np.asarray(h["loss"])
+                                            - np.asarray(ref_hist["loss"]))))
+                assert drift < 1e-4, (
+                    f"kernel impl diverged from reference under {backend}: "
+                    f"max |loss diff| = {drift}")
+            out["backends"][backend][impl] = {
+                "rounds_per_sec": rps, "max_loss_drift_vs_reference": drift,
+            }
+            print(f"bench,pfedsop-update/{backend}/{impl},{t*1e6:.0f},"
+                  f"rounds_per_sec={rps:.3f},drift={drift:.2e}")
+    print(f"{'backend':>10} {'reference r/s':>14} {kernel_impl + ' r/s':>20}")
+    for backend, row in out["backends"].items():
+        print(f"{backend:>10} {row['reference']['rounds_per_sec']:>14.3f} "
+              f"{row[kernel_impl]['rounds_per_sec']:>20.3f}")
+    return out
+
+
 def bench_roofline():
     """Summarise the dry-run artifacts (§Roofline table)."""
     print("\n== roofline: dry-run artifact summary ==")
@@ -279,6 +330,7 @@ BENCHES = {
     "figures": bench_figures,
     "engine": bench_engine,
     "kernels": bench_kernels,
+    "pfedsop-update": bench_pfedsop_update,
     "roofline": bench_roofline,
 }
 
@@ -287,6 +339,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="+", choices=sorted(BENCHES), default=None)
     ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--interpret", action="store_true",
+                    help="force the Pallas interpreter for kernel impls "
+                         "(pfedsop-update bench; automatic off-TPU)")
     args = ap.parse_args()
 
     OUT.mkdir(parents=True, exist_ok=True)
@@ -295,7 +350,12 @@ def main():
     t0 = time.time()
     for name in names:
         fn = BENCHES[name]
-        results[name] = fn(args.rounds) if name not in ("kernels", "roofline") else fn()
+        if name in ("kernels", "roofline"):
+            results[name] = fn()
+        elif name == "pfedsop-update":
+            results[name] = fn(args.rounds, interpret=args.interpret)
+        else:
+            results[name] = fn(args.rounds)
     (OUT / "results.json").write_text(json.dumps(results, indent=1, default=float))
     print(f"\nwrote experiments/bench/results.json ({time.time()-t0:.0f}s total)")
 

@@ -16,6 +16,7 @@ benchmarks/run.py for the Table II/III/IV analogs).
 """
 import argparse
 import json
+from dataclasses import replace
 from pathlib import Path
 
 import jax
@@ -81,12 +82,23 @@ def main():
                          "splits the participating clients across local devices")
     ap.add_argument("--shards", type=int, default=0,
                     help="shard_map only: device-shard count (0 = auto)")
+    ap.add_argument("--update-impl", default="",
+                    choices=["", "auto", "reference", "kernel", "kernel_interpret"],
+                    help="pFedSOP round-start update impl (DESIGN.md §9): "
+                         "fused Pallas kernel vs pytree reference; '' defers "
+                         "to the method config (auto: kernel on TPU). "
+                         "kernel_interpret runs the kernel body on CPU")
     ap.add_argument("--model", choices=["small", "resnet9"], default="small")
     ap.add_argument("--paper-scale", action="store_true",
                     help="K=100 clients, 20%% participation, 100 rounds (slow on CPU)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--tag", default="run")
     args = ap.parse_args()
+
+    if args.update_impl and not any(m.startswith("pfedsop") for m in args.methods):
+        ap.error("--update-impl targets the pFedSOP round-start update; none of "
+                 f"--methods {args.methods} has a kernel dispatch path "
+                 "(DESIGN.md §9), so the flag would be a silent no-op")
 
     if args.paper_scale:
         args.clients, args.participation, args.rounds = 100, 0.2, 100
@@ -114,14 +126,19 @@ def main():
         n_clients=args.clients, participation=args.participation,
         rounds=args.rounds, batch=args.batch, seed=args.seed,
         backend=args.backend, shards=args.shards,
+        update_impl=args.update_impl,
     )
 
     out_dir = Path("experiments/fl")
     out_dir.mkdir(parents=True, exist_ok=True)
     results = {}
     for name in args.methods:
+        # --update-impl targets the pFedSOP round-start update; baselines
+        # have no kernel dispatch path, so the override stays off for them
+        # (an FLRunConfig-level override on a knob-less method is an error).
+        cfg_m = run_cfg if name.startswith("pfedsop") else replace(run_cfg, update_impl="")
         fed = Federation(build_method(name, args.lr, args), loss, acc, params,
-                         data, run_cfg)
+                         data, cfg_m)
         hist = fed.run(verbose=True)
         results[name] = hist
         print(f"--> {name}: mean best acc {hist['mean_best_acc']:.4f}, "

@@ -279,6 +279,13 @@ class PFedSOP:
 
     broadcast = (global_delta, has_global); upload = local delta;
     client_state = pfedsop.ClientState.
+
+    The round-start update impl (pytree reference vs. fused Pallas kernel,
+    DESIGN.md §9) is carried on ``cfg.update_impl``; a run-level override
+    (``FLRunConfig.update_impl``) is pushed in here by
+    ``repro.fl.runtime.override_update_impl`` via ``dataclasses.replace``
+    — the method stays frozen/hashable, so the jitted round function can
+    still close over it.
     """
 
     cfg: pf.PFedSOPConfig = field(default_factory=pf.PFedSOPConfig)

@@ -31,21 +31,34 @@ Sherman-Morrison step to a scalar rescale:
 We implement the explicit Sherman-Morrison expression (left) — faithful to
 the paper's Algorithm 1 line 5 — and verify the algebraic collapse (right)
 and the dense matrix-inverse oracle agreement in tests/test_pfedsop_math.py.
+
+The round-start update (steps 1-4 above) has two interchangeable
+implementations selected by ``PFedSOPConfig.update_impl`` (DESIGN.md §9):
+the per-leaf pytree math in this module (the reference), and the fused
+Pallas kernel (``repro.kernels.pfedsop_update``) reached through a
+flatten-once adapter whose ``jax.custom_batching.custom_vmap`` rule turns
+the engines' per-client vmap into ONE batched (clients, N) kernel launch
+per round.  Both impls agree within fp32 reduction-order tolerance
+(tests/test_kernel_dispatch.py).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_update_impl
 from repro.utils.pytree import (
     tree_dot,
+    tree_flatten_to_vector,
     tree_lerp,
     tree_scale,
     tree_sqnorm,
     tree_sub,
+    tree_unflatten_from_vector,
     tree_where,
     tree_zeros_like,
 )
@@ -64,6 +77,10 @@ class PFedSOPConfig:
     local_iters: int = 0  # T; 0 = derive from data (one epoch)
     use_pc: bool = True  # personalization component (ablation Table III)
     eps: float = 1e-12  # cosine-similarity guard
+    # round-start update implementation (repro.kernels.dispatch, DESIGN.md
+    # §9): "auto" = fused Pallas kernel on TPU, pytree reference elsewhere;
+    # "reference" / "kernel" / "kernel_interpret" force one path.
+    update_impl: str = "auto"
 
 
 class ClientState(NamedTuple):
@@ -139,13 +156,77 @@ def sherman_morrison_step(delta_p: Pytree, rho):
     return tree_scale(coeff, delta_p)
 
 
+@functools.lru_cache(maxsize=None)
+def _fused_flat_update(eta1, rho, lam, eps, interpret):
+    """Flat-vector fused update with a custom vmap rule (cached per-config).
+
+    The primal runs the single-client kernel; the vmap rule — fired by the
+    engines' per-client ``jax.vmap`` (also inside ``ShardMapBackend``'s
+    shard_map body, where it sees each shard's local client slice) —
+    dispatches the whole batch to the (clients, N) grid kernel in one
+    launch.  An unbatched global delta (the usual replicated server
+    broadcast) is passed through as (N,) so the kernel reads one shared
+    buffer instead of materializing C copies.
+    """
+    from repro.kernels.pfedsop_update.ops import (
+        pfedsop_update,
+        pfedsop_update_batched,
+    )
+
+    @jax.custom_batching.custom_vmap
+    def fused(x, di, dg):
+        return pfedsop_update(x, di, dg, eta1=eta1, rho=rho, lam=lam,
+                              eps=eps, interpret=interpret)
+
+    @fused.def_vmap
+    def _batched_rule(axis_size, in_batched, x, di, dg):
+        x_b, di_b, _ = in_batched
+        if not x_b:
+            x = jnp.broadcast_to(x, (axis_size,) + x.shape)
+        if not di_b:
+            di = jnp.broadcast_to(di, (axis_size,) + di.shape)
+        out, beta = pfedsop_update_batched(x, di, dg, eta1=eta1, rho=rho,
+                                           lam=lam, eps=eps,
+                                           interpret=interpret)
+        return (out, beta), (True, True)
+
+    return fused
+
+
+def _personalize_fused(params, local_delta, global_delta, cfg, interpret):
+    """Kernel-impl personalize: flatten once, one fused call, unflatten once.
+
+    The f32 flat vectors concatenate all leaves, so the three reductions
+    run over the whole model in one tiled pass (vs. per-leaf partial sums
+    in the reference) — numerically equal up to fp32 reduction order.
+    ``aux`` carries only beta; the reference path's extra diagnostics
+    (sim/theta/...) would need a third sweep the fusion exists to avoid.
+    """
+    xv = tree_flatten_to_vector(params)
+    div = tree_flatten_to_vector(local_delta)
+    dgv = tree_flatten_to_vector(global_delta)
+    fused = _fused_flat_update(cfg.eta1, cfg.rho, cfg.lam, cfg.eps, interpret)
+    new_v, beta = fused(xv, div, dgv)
+    return tree_unflatten_from_vector(new_v, params), {"beta": beta}
+
+
 def personalize(
     params: Pytree,
     local_delta: Pytree,
     global_delta: Pytree,
     cfg: PFedSOPConfig,
 ):
-    """Algorithm 1: returns (x_it, aux) from (x_i(t-1), Delta_i, Delta)."""
+    """Algorithm 1: returns (x_it, aux) from (x_i(t-1), Delta_i, Delta).
+
+    Dispatches on ``cfg.update_impl`` (resolved host-side, so the choice is
+    baked into the trace): the fused Pallas kernel covers the personalized
+    blend + Sherman-Morrison step; the no-PC ablation removes the blend the
+    kernel fuses, so it always runs the reference pytree path.
+    """
+    impl = resolve_update_impl(cfg.update_impl)
+    if cfg.use_pc and impl != "reference":
+        return _personalize_fused(params, local_delta, global_delta, cfg,
+                                  interpret=impl == "kernel_interpret")
     if cfg.use_pc:
         dp, aux = personalized_delta(local_delta, global_delta, cfg.lam, cfg.eps)
     else:

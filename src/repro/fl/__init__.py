@@ -11,4 +11,9 @@ from repro.fl.engine import (  # noqa: F401
     make_engine,
     resolve_shards,
 )
-from repro.fl.runtime import Federation, FLRunConfig, validate_method  # noqa: F401
+from repro.fl.runtime import (  # noqa: F401
+    Federation,
+    FLRunConfig,
+    override_update_impl,
+    validate_method,
+)

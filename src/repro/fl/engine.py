@@ -151,11 +151,16 @@ class ShardMapBackend:
                 local_trees[0], broadcast_, *local_trees[1:]
             )
 
+        # check_rep=False: jax has no replication rule for pallas_call, so
+        # the rep checker rejects the kernel update impl (DESIGN.md §9).
+        # Safe here — every out_spec is fully specified on the client axis,
+        # so the check would not tighten anything.
         return shard_map(
             local,
             mesh=self.mesh,
             in_specs=(P(),) + specs,
             out_specs=P(CLIENT_AXIS),
+            check_rep=False,
         )(broadcast, *in_trees)
 
     def client_phase(self, one_client, gathered_states, broadcast, batches):

@@ -19,6 +19,7 @@ interface documented in ``repro.core.baselines``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict
@@ -30,6 +31,7 @@ import numpy as np
 from repro.core.baselines import FLMethod
 from repro.data.federated import FederatedData
 from repro.fl.engine import make_engine
+from repro.kernels.dispatch import resolve_update_impl
 
 Pytree = Any
 
@@ -53,6 +55,26 @@ def validate_method(method) -> None:
         )
 
 
+def override_update_impl(method, impl: str):
+    """Push a run-level update-impl choice into the method's config.
+
+    Methods expose the knob as an ``update_impl`` field on their frozen
+    ``cfg`` dataclass (``PFedSOPConfig`` today); anything else is an error
+    because silently running the reference path after an explicit kernel
+    request would invalidate impl benchmarks.
+    """
+    resolve_update_impl(impl)  # validate the name before touching the method
+    cfg = getattr(method, "cfg", None)
+    if cfg is None or not dataclasses.is_dataclass(cfg) or not hasattr(cfg, "update_impl"):
+        raise ValueError(
+            f"method {getattr(method, 'name', type(method).__name__)!r} has no "
+            "update_impl knob (expected a dataclass `cfg` with an `update_impl` "
+            "field, cf. PFedSOPConfig); unset FLRunConfig.update_impl or pick a "
+            "method with a kernel dispatch path (DESIGN.md §9)"
+        )
+    return dataclasses.replace(method, cfg=dataclasses.replace(cfg, update_impl=impl))
+
+
 @dataclass(frozen=True)
 class FLRunConfig:
     """Federation-level run parameters (method hyperparameters live on the
@@ -67,6 +89,12 @@ class FLRunConfig:
     eval_every: int = 1
     backend: str = "vmap"  # one of repro.fl.engine.BACKENDS
     shards: int = 0  # shard_map only; 0 = auto (largest divisor of K')
+    # Round-start update impl override (repro.kernels.dispatch.UPDATE_IMPLS;
+    # DESIGN.md §9).  "" = defer to the method's own config (e.g.
+    # PFedSOPConfig.update_impl); a non-empty value is pushed into the
+    # method at federation construction and errors on methods without the
+    # knob — a run-level impl request must never be silently ignored.
+    update_impl: str = ""
 
 
 class Federation:
@@ -87,6 +115,8 @@ class Federation:
         run_cfg: FLRunConfig,
     ):
         validate_method(method)
+        if run_cfg.update_impl:
+            method = override_update_impl(method, run_cfg.update_impl)
         self.method = method
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn

@@ -3,12 +3,18 @@
 Each subpackage: ``kernel.py`` (pl.pallas_call + explicit BlockSpec VMEM
 tiling, TPU target), ``ops.py`` (jit'd public wrapper with an
 ``interpret=`` switch so CPU CI validates the kernel body), ``ref.py``
-(pure-jnp oracle the tests assert against).
+(pure-jnp oracle the tests assert against).  ``dispatch.py`` is the
+impl-selection layer (auto/reference/kernel/kernel_interpret, DESIGN.md
+§9) that wires kernels into the production paths.
 
   pfedsop_update  fused pFedSOP round-start: 3 dot-product reductions +
                   Gompertz + Sherman-Morrison rescale + parameter AXPY in
-                  two HBM sweeps instead of five.
+                  two HBM sweeps instead of five.  Wired into the
+                  federation engines via ``repro.core.pfedsop.personalize``
+                  (batched client-axis grid; ``PFedSOPConfig.update_impl``).
   flash_gqa       blockwise online-softmax GQA attention with sliding
                   window + logit softcap (gemma2/3 local-global stacks).
-  rmsnorm         fused mean-square reduction + scale.
+                  Not yet dispatched from the model zoo (ROADMAP).
+  rmsnorm         fused mean-square reduction + scale.  Not yet dispatched
+                  from the model zoo (ROADMAP).
 """

@@ -1,0 +1,45 @@
+"""Kernel-dispatch layer: impl selection for fused Pallas hot paths.
+
+A compute primitive with both a pure-pytree reference implementation and a
+fused Pallas kernel is selected by an ``update_impl``-style knob
+(DESIGN.md §9).  The contract, shared by every current and future kernel
+dispatch (pfedsop_update today; rmsnorm / flash_gqa in the federated LM
+path next, ROADMAP "Open items"):
+
+  "auto"              resolve at trace time from the host platform: the
+                      Pallas kernel on TPU, the reference path elsewhere.
+  "reference"         always the pure-JAX pytree math (the oracle).
+  "kernel"            always the Pallas kernel, compiled for the
+                      accelerator (Mosaic on TPU).
+  "kernel_interpret"  the Pallas kernel body run through the interpreter —
+                      same code path and tiling as "kernel" but executable
+                      on CPU; used by CI, the parity tests, and the
+                      ``benchmarks/run.py --only pfedsop-update
+                      --interpret`` smoke bench.
+
+Resolution happens host-side (python, not traced), so the selected impl is
+baked into the jitted round function — there is no runtime branch on the
+hot path.  The parity guarantee: a kernel impl must match the reference
+impl within fp32 reduction-order tolerance on identical inputs (asserted
+in tests/test_kernel_dispatch.py).
+"""
+from __future__ import annotations
+
+import jax
+
+UPDATE_IMPLS = ("auto", "reference", "kernel", "kernel_interpret")
+
+
+def resolve_update_impl(impl: str) -> str:
+    """Resolve an update-impl knob to a concrete impl name.
+
+    Returns one of ("reference", "kernel", "kernel_interpret");
+    raises ValueError on anything outside ``UPDATE_IMPLS``.
+    """
+    if impl not in UPDATE_IMPLS:
+        raise ValueError(
+            f"unknown update_impl {impl!r}; choose from {UPDATE_IMPLS}"
+        )
+    if impl == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "reference"
+    return impl

@@ -4,6 +4,11 @@ Accepts the model-layer layout (B, S, H, D) and transposes to the kernel's
 (B, H, S, D).  ``interpret=True`` runs the kernel body in Python on CPU
 (the CI validation path); on TPU the same call lowers to Mosaic.
 
+Call sites: tests/test_kernels.py and ``benchmarks/run.py --only kernels``
+only — the model zoo (``repro.models.attention``) still runs its own
+blockwise-jnp attention (same math, mirrored by ref.py).  Routing the
+models through the DESIGN.md §9 dispatch layer is a ROADMAP open item.
+
 Block-pruning note (hillclimb lever, EXPERIMENTS.md §Perf): with a sliding
 window W << S, most (q_block, k_block) grid steps are fully masked.  The
 kernel still visits them (grid shape is static); the pruned variant reduces

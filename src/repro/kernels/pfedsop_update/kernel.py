@@ -22,6 +22,19 @@ difference between ~108 GB and ~270 GB of HBM traffic per round start.
 
 Tiles are (ROWS, 128) f32/bf16, lane-aligned; callers pad the flat vector
 to a tile multiple (ops.py).
+
+Two grid layouts, same kernel math:
+
+  single-client   grid (tiles,), operands (M, 128) — one flat d-vector.
+  batched         grid (clients, tiles), operands (C, M, 128) with the
+                  leading participating-client axis; per-client scalars
+                  (beta, eta*coeff) ride along as (C, 1) operands.  The
+                  server broadcast delta may be shared — shape (1, M, 128)
+                  with a client-invariant index map — so the global update
+                  is read once, not materialized per client.
+
+The batched layout is what the federation engines dispatch to
+(``repro.core.pfedsop`` via ``ops.pfedsop_update_batched``; DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -30,6 +43,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _split_rows(m: int, block_rows: int) -> int:
+    """Largest row-block <= block_rows that divides the M tile rows (halving)."""
+    rows = min(block_rows, m)
+    while m % rows:
+        rows //= 2
+    return rows
 
 
 def _reduce_kernel(di_ref, dg_ref, out_ref):
@@ -43,9 +64,7 @@ def _reduce_kernel(di_ref, dg_ref, out_ref):
 def reduce3_pallas(di2d, dg2d, block_rows: int = 512, interpret: bool = False):
     """di2d/dg2d: (M, 128) -> per-tile partials (n_tiles, 3) f32."""
     m, lanes = di2d.shape
-    rows = min(block_rows, m)
-    while m % rows:
-        rows //= 2
+    rows = _split_rows(m, block_rows)
     grid = (m // rows,)
     return pl.pallas_call(
         _reduce_kernel,
@@ -73,9 +92,7 @@ def update_pallas(x2d, di2d, dg2d, beta, eta_coeff, block_rows: int = 512,
                   interpret: bool = False):
     """x_new = x - eta_coeff * ((1-beta) d_i + beta d_g), tiled."""
     m, lanes = x2d.shape
-    rows = min(block_rows, m)
-    while m % rows:
-        rows //= 2
+    rows = _split_rows(m, block_rows)
     grid = (m // rows,)
     scal = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
     tile = pl.BlockSpec((rows, lanes), lambda i: (i, 0))
@@ -88,3 +105,80 @@ def update_pallas(x2d, di2d, dg2d, beta, eta_coeff, block_rows: int = 512,
         out_shape=jax.ShapeDtypeStruct((m, lanes), x2d.dtype),
         interpret=interpret,
     )(scal(beta), scal(eta_coeff), x2d, di2d, dg2d)
+
+
+# ---------------------------------------------------------------------------
+# Batched (leading participating-client axis) variants
+# ---------------------------------------------------------------------------
+
+
+def _dg_index_map(c_global: int):
+    """Client index map for the broadcast delta: shared (C_g=1) operands are
+    read from the same block for every client; per-client operands follow
+    the grid's client index."""
+    if c_global == 1:
+        return lambda c, i: (0, i, 0)
+    return lambda c, i: (c, i, 0)
+
+
+def _reduce_batched_kernel(di_ref, dg_ref, out_ref):
+    di = di_ref[0].astype(jnp.float32)
+    dg = dg_ref[0].astype(jnp.float32)
+    out_ref[0, 0, 0] = jnp.sum(di * dg)
+    out_ref[0, 0, 1] = jnp.sum(di * di)
+    out_ref[0, 0, 2] = jnp.sum(dg * dg)
+
+
+def reduce3_batched_pallas(di3d, dg3d, block_rows: int = 512,
+                           interpret: bool = False):
+    """di3d: (C, M, 128); dg3d: (C, M, 128) or (1, M, 128) shared.
+
+    Returns per-(client, tile) partials (C, n_tiles, 3) f32, summed over the
+    tile axis by XLA (tiny)."""
+    c, m, lanes = di3d.shape
+    rows = _split_rows(m, block_rows)
+    grid = (c, m // rows)
+    return pl.pallas_call(
+        _reduce_batched_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, rows, lanes), lambda ci, i: (ci, i, 0)),
+            pl.BlockSpec((1, rows, lanes), _dg_index_map(dg3d.shape[0])),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 3), lambda ci, i: (ci, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, grid[1], 3), jnp.float32),
+        interpret=interpret,
+    )(di3d, dg3d)
+
+
+def _update_batched_kernel(beta_ref, etacoeff_ref, x_ref, di_ref, dg_ref, o_ref):
+    beta = beta_ref[0, 0]
+    ec = etacoeff_ref[0, 0]
+    di = di_ref[0].astype(jnp.float32)
+    dg = dg_ref[0].astype(jnp.float32)
+    dp = (1.0 - beta) * di + beta * dg
+    o_ref[0] = (x_ref[0].astype(jnp.float32) - ec * dp).astype(o_ref.dtype)
+
+
+def update_batched_pallas(x3d, di3d, dg3d, beta, eta_coeff,
+                          block_rows: int = 512, interpret: bool = False):
+    """x_new[c] = x[c] - eta_coeff[c] * ((1-beta[c]) d_i[c] + beta[c] d_g[c]).
+
+    x3d/di3d: (C, M, 128); dg3d: (C, M, 128) or (1, M, 128) shared;
+    beta/eta_coeff: (C,) f32 per-client scalars."""
+    c, m, lanes = x3d.shape
+    rows = _split_rows(m, block_rows)
+    grid = (c, m // rows)
+    scal = lambda v: jnp.asarray(v, jnp.float32).reshape(c, 1)
+    tile = lambda f: pl.BlockSpec((1, rows, lanes), f)
+    per_client = lambda ci, i: (ci, i, 0)
+    const = pl.BlockSpec((1, 1), lambda ci, i: (ci, 0))
+    return pl.pallas_call(
+        _update_batched_kernel,
+        grid=grid,
+        in_specs=[const, const, tile(per_client), tile(per_client),
+                  tile(_dg_index_map(dg3d.shape[0]))],
+        out_specs=tile(per_client),
+        out_shape=jax.ShapeDtypeStruct((c, m, lanes), x3d.dtype),
+        interpret=interpret,
+    )(scal(beta), scal(eta_coeff), x3d, di3d, dg3d)

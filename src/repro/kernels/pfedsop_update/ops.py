@@ -2,8 +2,17 @@
 
 ``pfedsop_update(x, delta_i, delta_g, ...)`` takes flat parameter vectors
 (any float dtype), pads to (rows, 128) tiles, runs the two-phase kernel and
-returns (x_new, beta).  ``pfedsop_update_tree`` is the pytree convenience
-used by launch/steps.py when the kernel path is enabled.
+returns (x_new, beta).  ``pfedsop_update_batched`` is the same update with
+a leading participating-client axis — (C, N) operands, (C,) betas — backed
+by the (clients, tiles) grid kernels.  ``pfedsop_update_tree`` is the
+pytree convenience for one client.
+
+Call sites: the production path is ``repro.core.pfedsop.personalize``,
+which dispatches here when ``PFedSOPConfig.update_impl`` resolves to the
+kernel (DESIGN.md §9) — its vmap rule routes the federation engines'
+per-client vmap onto ``pfedsop_update_batched``.  Validation lives in
+tests/test_kernels.py + tests/test_kernel_dispatch.py (interpret mode) and
+``benchmarks/run.py --only pfedsop-update`` times reference vs. kernel.
 """
 from __future__ import annotations
 
@@ -12,7 +21,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pfedsop_update.kernel import reduce3_pallas, update_pallas
+from repro.kernels.pfedsop_update.kernel import (
+    reduce3_batched_pallas,
+    reduce3_pallas,
+    update_batched_pallas,
+    update_pallas,
+)
 from repro.kernels.pfedsop_update.ref import gompertz_beta
 from repro.utils.pytree import tree_flatten_to_vector, tree_unflatten_from_vector
 
@@ -24,6 +38,23 @@ def _pad2d(v):
     m = -(-n // LANES)  # ceil division -> rows
     pad = m * LANES - n
     return jnp.pad(v, (0, pad)).reshape(m, LANES), n
+
+
+def _pad3d(v):
+    """(C, N) -> (C, M, 128) lane-aligned tiles (zero padding)."""
+    c, n = v.shape
+    m = -(-n // LANES)
+    pad = m * LANES - n
+    return jnp.pad(v, ((0, 0), (0, pad))).reshape(c, m, LANES), n
+
+
+def _coeff_from_sums(dot, nl2, ng2, beta, rho):
+    """eta-free Sherman-Morrison coefficient from the three reductions.
+
+    ||dp||^2 expands as a quadratic form of (dot, nl2, ng2) — the fusion
+    observation of DESIGN.md §4 — so no fourth sweep is needed."""
+    sq = (1.0 - beta) ** 2 * nl2 + 2.0 * beta * (1.0 - beta) * dot + beta**2 * ng2
+    return 1.0 / rho - sq / (rho**2 + rho * sq)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -39,16 +70,45 @@ def pfedsop_update(x, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,
     dot, nl2, ng2 = sums[0], sums[1], sums[2]
 
     beta = gompertz_beta(dot, nl2, ng2, lam, eps)
-    sq = (1.0 - beta) ** 2 * nl2 + 2.0 * beta * (1.0 - beta) * dot + beta**2 * ng2
-    coeff = 1.0 / rho - sq / (rho**2 + rho * sq)
+    coeff = _coeff_from_sums(dot, nl2, ng2, beta, rho)
 
     out2d = update_pallas(x2d, di2d, dg2d, beta, eta1 * coeff, interpret=interpret)
     return out2d.reshape(-1)[:n], beta
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pfedsop_update_batched(x, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,
+                           eps=1e-12, interpret: bool = False):
+    """Fused update over a leading participating-client axis.
+
+    x/delta_i: (C, N).  delta_g: (C, N), or (N,) for the usual FL case where
+    every client sees the same server broadcast — then the kernel reads one
+    shared (1, M, 128) buffer instead of materializing C copies.
+    Returns (x_new (C, N), beta (C,) f32).
+    """
+    if delta_g.ndim == 1:
+        delta_g = delta_g[None]
+    di3d, n = _pad3d(delta_i)
+    dg3d, _ = _pad3d(delta_g)
+    x3d, _ = _pad3d(x)
+
+    partials = reduce3_batched_pallas(di3d, dg3d, interpret=interpret)
+    sums = jnp.sum(partials, axis=1)  # (C, 3)
+    dot, nl2, ng2 = sums[:, 0], sums[:, 1], sums[:, 2]
+
+    beta = gompertz_beta(dot, nl2, ng2, lam, eps)  # elementwise -> (C,)
+    coeff = _coeff_from_sums(dot, nl2, ng2, beta, rho)
+
+    out3d = update_batched_pallas(x3d, di3d, dg3d, beta, eta1 * coeff,
+                                  interpret=interpret)
+    return out3d.reshape(x.shape[0], -1)[:, :n], beta
+
+
 def pfedsop_update_tree(params, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,
                         interpret: bool = False):
-    """Pytree convenience wrapper (flatten -> kernel -> unflatten)."""
+    """Pytree convenience wrapper for ONE client (flatten -> kernel ->
+    unflatten).  The engine-facing batched path lives in
+    ``repro.core.pfedsop`` (flatten-once adapter + vmap dispatch)."""
     xv = tree_flatten_to_vector(params)
     div = tree_flatten_to_vector(delta_i)
     dgv = tree_flatten_to_vector(delta_g)

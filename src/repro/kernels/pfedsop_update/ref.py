@@ -1,6 +1,12 @@
-"""Pure-jnp oracle for the fused pFedSOP round-start update (flat vectors)."""
+"""Pure-jnp oracle for the fused pFedSOP round-start update (flat vectors).
+
+``pfedsop_update_ref`` is the single-client oracle;
+``pfedsop_update_batched_ref`` maps it over a leading client axis for the
+batched-kernel parity tests.
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -32,3 +38,16 @@ def pfedsop_update_ref(x, delta_i, delta_g, eta1, rho, lam, eps=1e-12):
     coeff = 1.0 / rho - sq / (rho**2 + rho * sq)
     x_new = (x.astype(jnp.float32) - eta1 * coeff * dp).astype(x.dtype)
     return x_new, beta
+
+
+def pfedsop_update_batched_ref(x, delta_i, delta_g, eta1, rho, lam, eps=1e-12):
+    """Per-client oracle mapped over the leading client axis.
+
+    x/delta_i: (C, N); delta_g: (C, N) or (N,) shared broadcast.
+    Returns (x_new (C, N), beta (C,)).
+    """
+    dg_axis = None if delta_g.ndim == 1 else 0
+    return jax.vmap(
+        lambda xi, di, dg: pfedsop_update_ref(xi, di, dg, eta1, rho, lam, eps),
+        in_axes=(0, 0, dg_axis),
+    )(x, delta_i, delta_g)

@@ -1,4 +1,10 @@
-"""Public jit'd wrapper for the rmsnorm kernel (arbitrary leading dims)."""
+"""Public jit'd wrapper for the rmsnorm kernel (arbitrary leading dims).
+
+Call sites: tests/test_kernels.py and ``benchmarks/run.py --only kernels``
+only — the model zoo (``repro.models.layers.rmsnorm``) still runs the
+plain-jnp norm (mirrored by ref.py).  Routing the transformer stacks
+through the DESIGN.md §9 dispatch layer is a ROADMAP open item.
+"""
 from __future__ import annotations
 
 import functools

@@ -1,0 +1,228 @@
+"""Kernel-dispatch layer tests (DESIGN.md §9).
+
+The parity guarantee: the fused Pallas update impl (interpret mode on CPU)
+must reproduce the pytree reference impl within fp32 reduction-order
+tolerance — per personalize() call, and end-to-end as identical federation
+round histories on the same seed under both engine backends (the 4-device
+``ShardMapBackend`` case runs in a subprocess, cf. tests/test_engine.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet_cifar import SMALL_CNN
+from repro.core import pfedsop as pf
+from repro.core.baselines import METHODS, PFedSOP
+from repro.data import FederatedData, dirichlet_partition, make_class_conditional_images
+from repro.fl import Federation, FLRunConfig, override_update_impl
+from repro.fl.runtime import masked_accuracy
+from repro.kernels.dispatch import UPDATE_IMPLS, resolve_update_impl
+from repro.models import cnn
+
+CFG = SMALL_CNN
+REPO = Path(__file__).resolve().parents[1]
+
+
+class TestResolveUpdateImpl:
+    def test_concrete_impls_pass_through(self):
+        for impl in ("reference", "kernel", "kernel_interpret"):
+            assert resolve_update_impl(impl) == impl
+
+    def test_auto_resolves_by_platform(self):
+        resolved = resolve_update_impl("auto")
+        expected = "kernel" if jax.default_backend() == "tpu" else "reference"
+        assert resolved == expected
+        assert resolved in UPDATE_IMPLS
+
+    def test_unknown_impl_rejected(self):
+        with pytest.raises(ValueError, match="unknown update_impl"):
+            resolve_update_impl("cuda")
+
+
+class TestOverrideUpdateImpl:
+    def test_pushes_into_pfedsop_cfg(self):
+        m = override_update_impl(PFedSOP(), "kernel_interpret")
+        assert m.cfg.update_impl == "kernel_interpret"
+        assert hash(m) is not None  # stays frozen/hashable for jit closure
+
+    def test_rejects_methods_without_knob(self):
+        with pytest.raises(ValueError, match="no .*update_impl knob"):
+            override_update_impl(METHODS["fedavg"](), "kernel_interpret")
+
+    def test_rejects_unknown_impl_before_touching_method(self):
+        with pytest.raises(ValueError, match="unknown update_impl"):
+            override_update_impl(PFedSOP(), "mosaic")
+
+
+class TestPersonalizeDispatch:
+    def _tree(self, key):
+        return {
+            "w": jax.random.normal(key, (33, 17)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (9,)),
+        }
+
+    def test_kernel_matches_reference(self):
+        tree = self._tree(jax.random.PRNGKey(0))
+        di = jax.tree.map(lambda x: x * 0.1, tree)
+        dg = jax.tree.map(lambda x: x * -0.05, tree)
+        ref_cfg = pf.PFedSOPConfig(eta1=0.02, rho=1.3, lam=0.8,
+                                   update_impl="reference")
+        ker_cfg = pf.PFedSOPConfig(eta1=0.02, rho=1.3, lam=0.8,
+                                   update_impl="kernel_interpret")
+        expect, aux_r = pf.personalize(tree, di, dg, ref_cfg)
+        got, aux_k = pf.personalize(tree, di, dg, ker_cfg)
+        np.testing.assert_allclose(float(aux_k["beta"]), float(aux_r["beta"]),
+                                   rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(expect)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_zero_norm_delta_guard(self):
+        """Zero deltas (e.g. a client whose local SGD made no progress) hit
+        the cosine guard identically in both impls — no NaNs."""
+        tree = self._tree(jax.random.PRNGKey(1))
+        zeros = jax.tree.map(jnp.zeros_like, tree)
+        for impl in ("reference", "kernel_interpret"):
+            cfg = pf.PFedSOPConfig(update_impl=impl)
+            out, aux = pf.personalize(tree, zeros, zeros, cfg)
+            for leaf, orig in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+                assert np.all(np.isfinite(np.asarray(leaf)))
+                np.testing.assert_allclose(np.asarray(leaf), np.asarray(orig),
+                                           rtol=1e-6)
+
+    def test_no_pc_ablation_stays_on_reference(self):
+        """use_pc=False removes the blend the kernel fuses; both impl
+        settings must produce the ablation's reference result."""
+        tree = self._tree(jax.random.PRNGKey(2))
+        di = jax.tree.map(lambda x: x * 0.3, tree)
+        dg = jax.tree.map(lambda x: x * 0.2, tree)
+        ref, _ = pf.personalize(tree, di, dg,
+                                pf.PFedSOPConfig(use_pc=False, update_impl="reference"))
+        ker, _ = pf.personalize(tree, di, dg,
+                                pf.PFedSOPConfig(use_pc=False, update_impl="kernel_interpret"))
+        for a, b in zip(jax.tree.leaves(ker), jax.tree.leaves(ref)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_client_round_first_round_branch(self):
+        """has_delta=False x global_has_delta=False: personalization is
+        masked out, so both impls must yield bit-identical local training."""
+        tree = self._tree(jax.random.PRNGKey(3))
+        state = pf.init_client_state(tree)
+        zeros = jax.tree.map(jnp.zeros_like, tree)
+        batches = {"x": jnp.ones((2, 4))}
+        loss_fn = lambda p, b: pf.tree_sqnorm(p) * jnp.mean(b["x"])
+        outs = {}
+        for impl in ("reference", "kernel_interpret"):
+            cfg = pf.PFedSOPConfig(update_impl=impl)
+            new_state, delta, metrics = pf.client_round(
+                loss_fn, state, zeros, jnp.asarray(False), batches, cfg)
+            assert not bool(metrics["personalized"])
+            outs[impl] = new_state.params
+        for a, b in zip(jax.tree.leaves(outs["reference"]),
+                        jax.tree.leaves(outs["kernel_interpret"])):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end federation parity, reference vs kernel impl
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    images, labels = make_class_conditional_images(400, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+    return data, params, loss, acc
+
+
+def _history(setup, backend, update_impl, rounds=3):
+    data, params, loss, acc = setup
+    run_cfg = FLRunConfig(n_clients=8, participation=0.5, rounds=rounds,
+                          batch=8, local_iters=2, seed=1, backend=backend,
+                          update_impl=update_impl)
+    fed = Federation(PFedSOP(), loss, acc, params, data, run_cfg)
+    return fed.run()
+
+
+def test_federation_impl_parity_vmap(setup):
+    """Kernel-impl round histories == reference within fp32 tolerance under
+    VmapBackend; rounds=3 covers the has_delta=False first round (masked
+    personalization) and the personalized rounds after it."""
+    h_ref = _history(setup, "vmap", "reference")
+    h_ker = _history(setup, "vmap", "kernel_interpret")
+    np.testing.assert_allclose(h_ker["loss"], h_ref["loss"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_ker["acc"], h_ref["acc"], rtol=1e-5, atol=1e-6)
+
+
+def test_federation_impl_parity_shard_map_single_device(setup):
+    """Same check through ShardMapBackend (degenerate 1-shard mesh): the
+    custom-vmap dispatch must fire identically inside shard_map."""
+    h_ref = _history(setup, "shard_map", "reference")
+    h_ker = _history(setup, "shard_map", "kernel_interpret")
+    np.testing.assert_allclose(h_ker["loss"], h_ref["loss"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(h_ker["acc"], h_ref["acc"], rtol=1e-5, atol=1e-6)
+
+
+_MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import jax, numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.configs.resnet_cifar import SMALL_CNN as CFG
+    from repro.core.baselines import PFedSOP
+    from repro.data import (FederatedData, dirichlet_partition,
+                            make_class_conditional_images)
+    from repro.fl import Federation, FLRunConfig
+    from repro.fl.runtime import masked_accuracy
+    from repro.models import cnn
+
+    images, labels = make_class_conditional_images(400, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+
+    hists = {}
+    for impl in ["reference", "kernel_interpret"]:
+        cfg = FLRunConfig(n_clients=8, participation=0.5, rounds=2, batch=8,
+                          local_iters=2, seed=1, backend="shard_map",
+                          update_impl=impl)
+        fed = Federation(PFedSOP(), loss, acc, params, data, cfg)
+        hists[impl] = fed.run()
+        assert hists[impl]["engine"]["shards"] == 4, hists[impl]["engine"]
+    np.testing.assert_allclose(hists["kernel_interpret"]["loss"],
+                               hists["reference"]["loss"], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(hists["kernel_interpret"]["acc"],
+                               hists["reference"]["acc"], rtol=1e-5, atol=1e-6)
+    print("MULTIDEV_IMPL_PARITY_OK")
+    """
+)
+
+
+def test_federation_impl_parity_shard_map_multi_device():
+    """Kernel vs reference impl on a real 4-shard client mesh (forced host
+    devices; subprocess because the XLA device count is fixed at jax init)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "MULTIDEV_IMPL_PARITY_OK" in res.stdout

@@ -9,8 +9,15 @@ from hyp_compat import given, hst, settings  # optional-hypothesis shim
 from repro.kernels.flash_gqa.kernel import flash_gqa_pallas
 from repro.kernels.flash_gqa.ops import flash_gqa
 from repro.kernels.flash_gqa.ref import flash_gqa_ref
-from repro.kernels.pfedsop_update.ops import pfedsop_update, pfedsop_update_tree
-from repro.kernels.pfedsop_update.ref import pfedsop_update_ref
+from repro.kernels.pfedsop_update.ops import (
+    pfedsop_update,
+    pfedsop_update_batched,
+    pfedsop_update_tree,
+)
+from repro.kernels.pfedsop_update.ref import (
+    pfedsop_update_batched_ref,
+    pfedsop_update_ref,
+)
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.core import pfedsop as pf
@@ -93,6 +100,70 @@ class TestPFedSOPUpdate:
         ref, _ = pfedsop_update_ref(x, di, dg, eta, rho, lam)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
         assert 0.0 <= float(beta) <= 1.0
+
+
+class TestPFedSOPUpdateBatched:
+    """The (clients, N) grid variant the federation engines dispatch to."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("c,n", [(1, 7), (3, 128), (4, 1023), (5, 4096)])
+    def test_sweep_vs_ref(self, c, n, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(c * n), 3)
+        x = jax.random.normal(ks[0], (c, n), dtype)
+        di = jax.random.normal(ks[1], (c, n), dtype)
+        dg = jax.random.normal(ks[2], (c, n), dtype)
+        out, beta = pfedsop_update_batched(x, di, dg, eta1=0.03, rho=0.9,
+                                           lam=1.1, interpret=True)
+        ref, beta_r = pfedsop_update_batched_ref(x, di, dg, 0.03, 0.9, 1.1)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+        np.testing.assert_allclose(np.asarray(beta), np.asarray(beta_r), rtol=1e-4)
+
+    def test_shared_broadcast_delta(self):
+        """A (N,) global delta (replicated server broadcast) must equal the
+        explicitly tiled (C, N) form — the kernel reads one shared buffer."""
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        c, n = 4, 1000
+        x = jax.random.normal(ks[0], (c, n))
+        di = jax.random.normal(ks[1], (c, n))
+        dg = jax.random.normal(ks[2], (n,))
+        out_shared, beta_s = pfedsop_update_batched(x, di, dg, interpret=True)
+        out_tiled, beta_t = pfedsop_update_batched(
+            x, di, jnp.broadcast_to(dg, (c, n)), interpret=True)
+        np.testing.assert_allclose(np.asarray(out_shared), np.asarray(out_tiled),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(beta_s), np.asarray(beta_t), rtol=1e-6)
+
+    def test_rows_equal_single_client_kernel(self):
+        """Each batched row reproduces the single-client kernel: the grid
+        layout must not change the per-client tile sums (tolerance covers
+        XLA fusion/FMA differences between the two programs, not math)."""
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        c, n = 3, 2000
+        x = jax.random.normal(ks[0], (c, n))
+        di = jax.random.normal(ks[1], (c, n))
+        dg = jax.random.normal(ks[2], (n,))
+        out_b, beta_b = pfedsop_update_batched(x, di, dg, eta1=0.05, rho=1.2,
+                                               lam=0.7, interpret=True)
+        for i in range(c):
+            out_1, beta_1 = pfedsop_update(x[i], di[i], dg, eta1=0.05, rho=1.2,
+                                           lam=0.7, interpret=True)
+            np.testing.assert_allclose(np.asarray(out_b[i]), np.asarray(out_1),
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(float(beta_b[i]), float(beta_1), rtol=1e-6)
+
+    def test_zero_norm_deltas(self):
+        """Zero local/global updates hit the cosine guard: neutral beta
+        (theta = pi/2), finite output, x unchanged when both deltas vanish."""
+        c, n = 2, 300
+        x = jax.random.normal(jax.random.PRNGKey(0), (c, n))
+        zeros = jnp.zeros((c, n))
+        out, beta = pfedsop_update_batched(x, zeros, zeros, interpret=True)
+        ref, beta_r = pfedsop_update_batched_ref(x, zeros, zeros, 0.01, 1.0, 1.0)
+        assert np.all(np.isfinite(np.asarray(out)))
+        np.testing.assert_allclose(np.asarray(beta), np.asarray(beta_r), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
 
 
 class TestFlashGQA:
