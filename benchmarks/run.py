@@ -25,6 +25,11 @@ Mapping to the paper (Sen & Mohan 2025):
            rounds/sec for the pytree reference vs the fused Pallas kernel
            under both backends, with a per-backend parity assertion;
            --interpret forces the interpreter kernel (automatic off-TPU)
+  model-fwd model-zoo forward tokens/sec per kernel impl x config
+           (DESIGN.md §9, ``ModelConfig.kernel_impl``): reference vs
+           kernel_interpret on a sliding-window (gemma3) and a
+           full-attention (granite) reduced config, with a max-abs-drift
+           assertion and a window-pruned flash_gqa grid-shape check
   roofline summary table from experiments/dryrun/*.json artifacts
 
 Output: CSV lines ``name,us_per_call,derived`` + a human table; artifacts
@@ -301,6 +306,97 @@ def bench_pfedsop_update(rounds, interpret=False):
     return out
 
 
+def bench_model_fwd():
+    """Model-zoo forward throughput per kernel impl x config (DESIGN.md §9).
+
+    The dominant per-round FLOPs of the federated LM path are the
+    transformer forward/backward, so the model-level ``kernel_impl`` knob
+    is benched end-to-end here: tokens/sec through ``transformer.forward``
+    for the reference path vs the Pallas kernel path (interpret mode on
+    CPU — correctness-path timing; honest kernel wall-times need a TPU).
+    Two reduced configs, one with sliding-window layers (gemma3-1b, window
+    capped so the window actually binds at bench seq-len) and one
+    full-attention (granite-3-2b).  Asserts (a) max-abs hidden-state drift
+    between impls and (b) that the window-pruned flash_gqa grid visits
+    strictly fewer KV blocks than the unpruned grid — at the shape this
+    bench runs AND at the production train_4k shape (grid-shape assertion,
+    not timing).
+    """
+    print("\n== model-fwd: tokens/sec per kernel impl x config ==")
+    from repro.configs import get_config
+    from repro.kernels.flash_gqa.kernel import flash_gqa_grid
+    from repro.models import transformer as tf
+
+    b, s, iters = 2, 64, 3
+    win = 16
+    configs = []
+    # sliding-window + qk-norm config: cap every window at `win` (the
+    # long_500k machinery) and shrink attention blocks so the window is
+    # smaller than the sequence at bench size
+    g3 = get_config("gemma3-1b", reduced=True).replace(
+        long_context_window=win, attn_q_block=win)
+    configs.append(tf.apply_long_context(g3))
+    configs.append(get_config("granite-3-2b", reduced=True))
+
+    out = {}
+    for cfg in configs:
+        key = jax.random.PRNGKey(0)
+        params = tf.init_params(key, cfg)
+        batch = {"tokens": jax.random.randint(jax.random.fold_in(key, 1),
+                                              (b, s), 0, cfg.vocab_size)}
+        out[cfg.name] = {}
+        hidden = {}
+        for impl in ["reference", "kernel_interpret"]:
+            c = cfg.replace(kernel_impl=impl)
+            fwd = jax.jit(lambda p, bt, c=c: tf.forward(p, c, bt)[0])
+            h = jax.block_until_ready(fwd(params, batch))  # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                h = fwd(params, batch)
+            jax.block_until_ready(h)
+            dt = (time.perf_counter() - t0) / iters
+            tps = b * s / max(dt, 1e-9)
+            hidden[impl] = np.asarray(h, np.float32)
+            out[cfg.name][impl] = {"tokens_per_sec": tps, "s_per_fwd": dt}
+            print(f"bench,model-fwd/{cfg.name}/{impl},{dt*1e6:.0f},"
+                  f"tokens_per_sec={tps:.0f}")
+        drift = float(np.max(np.abs(hidden["reference"]
+                                    - hidden["kernel_interpret"])))
+        assert drift < 1e-4, (
+            f"{cfg.name}: kernel impl drifted from reference: "
+            f"max |hidden diff| = {drift}")
+        out[cfg.name]["max_abs_drift"] = drift
+        print(f"bench,model-fwd/{cfg.name}/drift,0,max_abs={drift:.2e}")
+
+    # window-pruned grid: strictly fewer KV blocks than unpruned, at the
+    # bench shape and at the production train_4k shape (gemma2 window 4096
+    # at 32k prefill; gemma3 window 512 at 4k train)
+    prune_cases = [
+        ("bench", s, win, win, win),
+        ("gemma3_train4k", 4096, 512, 512, 512),
+        ("gemma2_prefill32k", 32768, 512, 512, 4096),
+    ]
+    out["pruned_grid"] = {}
+    for tag, ss, bq, bk, w in prune_cases:
+        nq_p, nk_p = flash_gqa_grid(ss, bq, bk, window=w, prune_window=True)
+        nq_u, nk_u = flash_gqa_grid(ss, bq, bk, window=w, prune_window=False)
+        assert nq_p == nq_u and nk_p < nk_u, (
+            f"pruned grid must visit fewer KV blocks: {tag}: "
+            f"pruned {(nq_p, nk_p)} vs unpruned {(nq_u, nk_u)}")
+        out["pruned_grid"][tag] = {"pruned_nk": nk_p, "unpruned_nk": nk_u}
+        print(f"bench,model-fwd/pruned-grid/{tag},0,"
+              f"kv_blocks={nk_p}_of_{nk_u}")
+
+    print(f"{'config':>16} {'ref tok/s':>10} {'kernel tok/s':>13} {'drift':>9}")
+    for name, row in out.items():
+        if name == "pruned_grid":
+            continue
+        print(f"{name:>16} {row['reference']['tokens_per_sec']:>10.0f} "
+              f"{row['kernel_interpret']['tokens_per_sec']:>13.0f} "
+              f"{row['max_abs_drift']:>9.2e}")
+    return out
+
+
 def bench_roofline():
     """Summarise the dry-run artifacts (§Roofline table)."""
     print("\n== roofline: dry-run artifact summary ==")
@@ -331,6 +427,7 @@ BENCHES = {
     "engine": bench_engine,
     "kernels": bench_kernels,
     "pfedsop-update": bench_pfedsop_update,
+    "model-fwd": bench_model_fwd,
     "roofline": bench_roofline,
 }
 
@@ -350,7 +447,7 @@ def main():
     t0 = time.time()
     for name in names:
         fn = BENCHES[name]
-        if name in ("kernels", "roofline"):
+        if name in ("kernels", "model-fwd", "roofline"):
             results[name] = fn()
         elif name == "pfedsop-update":
             results[name] = fn(args.rounds, interpret=args.interpret)

@@ -26,9 +26,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "reference", "kernel", "kernel_interpret"],
+                    help="model-zoo kernel policy (rmsnorm/flash_gqa, "
+                         "DESIGN.md §9); auto = kernel on TPU")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=True)
+    cfg = get_config(args.arch, reduced=True).replace(kernel_impl=args.kernel_impl)
     print(f"serving {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
           f"family={cfg.family} vocab={cfg.vocab_size}")
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)

@@ -31,15 +31,21 @@ def main():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--eta", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "reference", "kernel", "kernel_interpret"],
+                    help="model-zoo kernel policy (rmsnorm/flash_gqa, "
+                         "DESIGN.md §9): reference vs kernel_interpret on the "
+                         "same seed produces identical loss histories")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=True)
+    cfg = get_config(args.arch, reduced=True).replace(kernel_impl=args.kernel_impl)
     if cfg.frontend != "none":
         raise SystemExit(f"{args.arch} needs a modality frontend; this example "
                          "covers the text archs (see serve_decode.py for the rest)")
     pcfg = pf.PFedSOPConfig(eta1=args.eta, eta2=args.eta, rho=1.0, lam=1.0)
 
-    print(f"pFedSOP x {cfg.name}: {args.clients} clients, {args.rounds} rounds")
+    print(f"pFedSOP x {cfg.name}: {args.clients} clients, {args.rounds} rounds, "
+          f"kernel_impl={cfg.kernel_impl}")
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
     n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
     print(f"params: {n_params/1e6:.2f}M")
@@ -73,7 +79,7 @@ def main():
             betas.append(float(m["beta"]))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
         global_delta, has_global = pf.server_aggregate(stacked), jnp.asarray(True)
-        print(f"round {t:3d} loss={np.mean(losses):.4f} "
+        print(f"round {t:3d} loss={np.mean(losses):.6f} "
               f"beta={np.mean(betas):.3f} ({time.perf_counter()-t0:.1f}s)")
 
     assert np.isfinite(np.mean(losses))

@@ -91,6 +91,15 @@ class ModelConfig:
     dtype: str = "bfloat16"
     norm_eps: float = 1e-6
 
+    # model-level kernel policy (DESIGN.md §9): which implementation the
+    # model-zoo hot paths (rmsnorm, flash_gqa attention prefill/training)
+    # run — "auto" (kernel on TPU, reference elsewhere) / "reference" /
+    # "kernel" / "kernel_interpret".  Resolved host-side via
+    # repro.kernels.dispatch.resolve_impl, so no runtime branch survives
+    # jit.  CLI: --kernel-impl on launch/train.py, launch/serve.py and the
+    # examples/ entry points.
+    kernel_impl: str = "auto"
+
     # int8 KV cache (symmetric per-token-per-head quantisation) - halves
     # decode cache HBM; default-on for musicgen-large whose decode_32k
     # cache is 1.6 TB (EXPERIMENTS.md §Perf iteration 8)

@@ -13,8 +13,12 @@ impl-selection layer (auto/reference/kernel/kernel_interpret, DESIGN.md
                   federation engines via ``repro.core.pfedsop.personalize``
                   (batched client-axis grid; ``PFedSOPConfig.update_impl``).
   flash_gqa       blockwise online-softmax GQA attention with sliding
-                  window + logit softcap (gemma2/3 local-global stacks).
-                  Not yet dispatched from the model zoo (ROADMAP).
-  rmsnorm         fused mean-square reduction + scale.  Not yet dispatched
-                  from the model zoo (ROADMAP).
+                  window + logit softcap (gemma2/3 local-global stacks)
+                  and a window-pruned KV grid.  Wired into the model zoo's
+                  training/prefill path via
+                  ``repro.models.attention.attention_fwd``
+                  (``ModelConfig.kernel_impl``).
+  rmsnorm         fused mean-square reduction + scale.  Wired into every
+                  model-zoo norm via ``repro.models.layers.rmsnorm``
+                  (``ModelConfig.kernel_impl``).
 """

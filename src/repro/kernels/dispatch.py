@@ -1,45 +1,113 @@
 """Kernel-dispatch layer: impl selection for fused Pallas hot paths.
 
 A compute primitive with both a pure-pytree reference implementation and a
-fused Pallas kernel is selected by an ``update_impl``-style knob
-(DESIGN.md §9).  The contract, shared by every current and future kernel
-dispatch (pfedsop_update today; rmsnorm / flash_gqa in the federated LM
-path next, ROADMAP "Open items"):
+fused Pallas kernel is selected by an impl knob (DESIGN.md §9).  Every
+dispatched kernel — ``pfedsop_update`` (knob: ``PFedSOPConfig.update_impl``),
+``rmsnorm`` and ``flash_gqa`` (knob: ``ModelConfig.kernel_impl``) — resolves
+through the same vocabulary and the same ``resolve_impl`` code path:
 
   "auto"              resolve at trace time from the host platform: the
                       Pallas kernel on TPU, the reference path elsewhere.
-  "reference"         always the pure-JAX pytree math (the oracle).
+  "reference"         always the pure-JAX math (the oracle).
   "kernel"            always the Pallas kernel, compiled for the
                       accelerator (Mosaic on TPU).
   "kernel_interpret"  the Pallas kernel body run through the interpreter —
                       same code path and tiling as "kernel" but executable
                       on CPU; used by CI, the parity tests, and the
-                      ``benchmarks/run.py --only pfedsop-update
-                      --interpret`` smoke bench.
+                      interpret-mode benches (``benchmarks/run.py --only
+                      pfedsop-update --interpret`` / ``--only model-fwd``).
 
 Resolution happens host-side (python, not traced), so the selected impl is
-baked into the jitted round function — there is no runtime branch on the
-hot path.  The parity guarantee: a kernel impl must match the reference
-impl within fp32 reduction-order tolerance on identical inputs (asserted
-in tests/test_kernel_dispatch.py).
+baked into the jitted round/forward function — there is no runtime branch
+on the hot path.  The parity guarantee: a kernel impl must match the
+reference impl within fp32 reduction-order tolerance on identical inputs
+(asserted in tests/test_kernel_dispatch.py and tests/test_model_dispatch.py).
+
+The per-kernel registry maps each dispatched kernel to the config-knob
+name its callers use; registering here is what makes a kernel's "auto"
+resolution attributable in logs and its error messages name the right
+knob.  New kernel integrations call ``register_kernel`` (or add an entry
+below) rather than growing a parallel resolve function.
 """
 from __future__ import annotations
 
+import functools
+import logging
+
 import jax
 
-UPDATE_IMPLS = ("auto", "reference", "kernel", "kernel_interpret")
+logger = logging.getLogger(__name__)
+
+IMPLS = ("auto", "reference", "kernel", "kernel_interpret")
+
+# Backwards-compatible alias from the first (pfedsop_update-only) dispatch.
+UPDATE_IMPLS = IMPLS
+
+# kernel name -> the config-knob name callers select it with (used in error
+# messages and the one-shot "auto resolved to ..." log line).
+_REGISTRY: dict[str, str] = {}
+
+# kernels whose "auto" resolution has been logged already (log once per
+# kernel per process, so long federations don't spam but every run's log
+# still says which impl it actually executed).
+_AUTO_LOGGED: set[str] = set()
+
+
+def register_kernel(name: str, knob: str = "kernel_impl") -> None:
+    """Register a dispatched kernel under the config knob that selects it."""
+    _REGISTRY[name] = knob
+
+
+def registered_kernels() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+@functools.lru_cache(maxsize=1)
+def _default_backend() -> str:
+    """The host platform, looked up once per process.
+
+    ``jax.default_backend()`` initializes the backend on first call; hoisting
+    it behind a cache keeps repeated resolution (every norm/attention call
+    site of every layer trace) off that path.
+    """
+    return jax.default_backend()
+
+
+def resolve_impl(impl: str, kernel: str) -> str:
+    """Resolve an impl knob for a registered kernel to a concrete impl name.
+
+    Returns one of ("reference", "kernel", "kernel_interpret"); raises
+    ValueError on an unregistered kernel or anything outside ``IMPLS``.
+    """
+    knob = _REGISTRY.get(kernel)
+    if knob is None:
+        raise ValueError(
+            f"unregistered kernel {kernel!r}; registered: {registered_kernels()}"
+        )
+    if impl not in IMPLS:
+        raise ValueError(f"unknown {knob} {impl!r}; choose from {IMPLS}")
+    if impl != "auto":
+        return impl
+    backend = _default_backend()
+    resolved = "kernel" if backend == "tpu" else "reference"
+    if kernel not in _AUTO_LOGGED:
+        _AUTO_LOGGED.add(kernel)
+        logger.info(
+            "kernel-dispatch: %s=auto resolved to %r for %s (backend=%s)",
+            knob, resolved, kernel, backend,
+        )
+    return resolved
 
 
 def resolve_update_impl(impl: str) -> str:
-    """Resolve an update-impl knob to a concrete impl name.
+    """Resolve the pFedSOP round-start-update knob (back-compat wrapper).
 
     Returns one of ("reference", "kernel", "kernel_interpret");
     raises ValueError on anything outside ``UPDATE_IMPLS``.
     """
-    if impl not in UPDATE_IMPLS:
-        raise ValueError(
-            f"unknown update_impl {impl!r}; choose from {UPDATE_IMPLS}"
-        )
-    if impl == "auto":
-        return "kernel" if jax.default_backend() == "tpu" else "reference"
-    return impl
+    return resolve_impl(impl, "pfedsop_update")
+
+
+register_kernel("pfedsop_update", knob="update_impl")
+register_kernel("rmsnorm")
+register_kernel("flash_gqa")

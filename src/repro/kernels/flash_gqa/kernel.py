@@ -2,7 +2,7 @@
 
 The canonical flash-attention tiling adapted for the assigned archs:
 
-  grid = (B * H, S/BQ, S/BK)   - the KV block index is the INNERMOST grid
+  grid = (B * H, S/BQ, nk)     - the KV block index is the INNERMOST grid
   dimension; TPU executes the grid sequentially per core, so the running
   (m, l, acc) online-softmax state lives in VMEM scratch and persists
   across the KV iterations of one (batch-head, q-block) pair.
@@ -13,8 +13,23 @@ The canonical flash-attention tiling adapted for the assigned archs:
 GQA: query head h reads KV head h // (H/KV) via the k/v BlockSpec index
 maps - no KV replication in HBM.  Sliding window + causality are enforced
 element-wise inside each tile via broadcasted iota; fully-masked tiles
-contribute exp(-inf) = 0 (the ops.py wrapper documents the block-pruning
-hillclimb that skips them outright).
+contribute exp(-inf) = 0.
+
+Window-pruned grid (``prune_window``, default on): with a sliding window
+W << S most (q_block, k_block) steps are fully masked, so for windowed
+layers the KV grid axis shrinks from nk = S/BK to
+
+  nkp = min(nk, ceil((W + BQ) / BK) + 1)
+
+blocks per q row and the k/v index maps shift to the window: for q block
+qi the visited k blocks are max(0, last - nkp + 1) .. last with
+last = (qi*BQ + BQ - 1) // BK.  Coverage is exact: every k block holding
+a key inside the union of the rows' windows (k in (qi*BQ - W, qi*BQ +
+BQ - 1]) lands in that range, earlier blocks are fully outside the
+window, and any visited block beyond a row's window is element-masked as
+before.  ``flash_gqa_grid`` exposes the resulting (nq, nk_visited) pair -
+it is the same computation ``flash_gqa_pallas`` builds its grid from, so
+benchmarks/tests assert block-count wins against it directly.
 
 Softcap (gemma2) is applied to the scaled scores before masking, matching
 repro/models/attention.py.
@@ -35,16 +50,58 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, window, softcap, bq: int, bk: int, nk: int):
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
+def _block_sizes(s: int, bq: int, bk: int):
+    """Clamp/halve the requested block sizes until they divide S."""
+    bq = min(bq, s)
+    while s % bq:
+        bq //= 2
+    bk = min(bk, s)
+    while s % bk:
+        bk //= 2
+    return bq, bk, s // bq, s // bk
 
-    @pl.when(ki == 0)
+
+def _first_kv_block(qi, bq: int, bk: int, nkp: int):
+    """First visited k-block for q block ``qi`` under the pruned grid.
+
+    The single source for the window shift: both the kernel body's mask
+    positions and the k/v BlockSpec index maps derive the true k-block
+    index as ``_first_kv_block(qi, ...) + j`` — they MUST agree, or the
+    element mask would be computed for a different tile than the one the
+    BlockSpec loaded.
+    """
+    last = (qi * bq + bq - 1) // bk
+    return jnp.maximum(last - (nkp - 1), 0)
+
+
+def flash_gqa_grid(s: int, bq: int = 512, bk: int = 512, window=None,
+                   prune_window: bool = True):
+    """(nq, nk_visited) for the given sequence/window/tiling.
+
+    ``nk_visited`` is the number of KV grid steps each q row actually
+    executes — pruned to ceil((W+BQ)/BK)+1 for sliding-window layers when
+    ``prune_window`` (the asymptotic win: O(S·W) instead of O(S²) tiles).
+    This is the exact grid ``flash_gqa_pallas`` launches.
+    """
+    bq, bk, nq, nk = _block_sizes(s, bq, bk)
+    if window is None or not prune_window:
+        return nq, nk
+    return nq, min(nk, pl.cdiv(window + bq, bk) + 1)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, window, softcap, bq: int, bk: int, nkp: int,
+                  pruned: bool):
+    qi = pl.program_id(1)
+    j = pl.program_id(2)  # pruned: offset into the visited window blocks
+
+    @pl.when(j == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ki = _first_kv_block(qi, bq, bk, nkp) + j if pruned else j  # true k-block
 
     q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
     k = k_ref[0, 0].astype(jnp.float32)  # (BK, D)
@@ -70,14 +127,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     m_scr[...] = m_new
     l_scr[...] = l_new
 
-    @pl.when(ki == nk - 1)
+    @pl.when(j == nkp - 1)
     def _finalize():
         l = l_scr[...]
         o_ref[0] = (acc_scr[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
 
 
 def flash_gqa_pallas(q, k, v, window=None, softcap=None, scale=None,
-                     bq: int = 512, bk: int = 512, interpret: bool = False):
+                     bq: int = 512, bk: int = 512, interpret: bool = False,
+                     prune_window: bool = True):
     """q: (B,H,S,D), k/v: (B,KV,S,D) -> (B,H,S,D).  Causal GQA."""
     b, h, s, d = q.shape
     kv = k.shape[1]
@@ -85,31 +143,35 @@ def flash_gqa_pallas(q, k, v, window=None, softcap=None, scale=None,
     g = h // kv
     sc = scale if scale is not None else d**-0.5
 
-    bq = min(bq, s)
-    while s % bq:
-        bq //= 2
-    bk = min(bk, s)
-    while s % bk:
-        bk //= 2
-    nq, nk = s // bq, s // bk
+    bq, bk, nq, nk = _block_sizes(s, bq, bk)
+    _, nkp = flash_gqa_grid(s, bq, bk, window, prune_window)
+    pruned = nkp < nk
 
     qf = q.reshape(b * h, s, d)
-    grid = (b * h, nq, nk)
+    grid = (b * h, nq, nkp)
+
+    if pruned:
+        # shift the KV grid axis to the window: blocks last-nkp+1 .. last
+        def kv_index(bh, qi, j):
+            return (bh // h, (bh % h) // g, _first_kv_block(qi, bq, bk, nkp) + j, 0)
+    else:
+        def kv_index(bh, qi, j):
+            return (bh // h, (bh % h) // g, j, 0)
 
     kernel = functools.partial(
         _flash_kernel, scale=sc, window=window, softcap=softcap,
-        bq=bq, bk=bk, nk=nk,
+        bq=bq, bk=bk, nkp=nkp, pruned=pruned,
     )
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bq, d), lambda bh, qi, j: (bh, qi, 0)),
             # GQA: map the flattened batch-head index to (batch, kv head)
-            pl.BlockSpec((1, 1, bk, d), lambda bh, qi, ki: (bh // h, (bh % h) // g, ki, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda bh, qi, ki: (bh // h, (bh % h) // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
+            pl.BlockSpec((1, 1, bk, d), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, j: (bh, qi, 0)),
         out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),

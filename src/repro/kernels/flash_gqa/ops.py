@@ -4,16 +4,26 @@ Accepts the model-layer layout (B, S, H, D) and transposes to the kernel's
 (B, H, S, D).  ``interpret=True`` runs the kernel body in Python on CPU
 (the CI validation path); on TPU the same call lowers to Mosaic.
 
-Call sites: tests/test_kernels.py and ``benchmarks/run.py --only kernels``
-only — the model zoo (``repro.models.attention``) still runs its own
-blockwise-jnp attention (same math, mirrored by ref.py).  Routing the
-models through the DESIGN.md §9 dispatch layer is a ROADMAP open item.
+Call sites: the model zoo — ``repro.models.attention.attention_fwd`` (the
+training/prefill path behind every transformer/MoE/SSM-hybrid stack and
+the serving prefill) dispatches here when ``ModelConfig.kernel_impl``
+resolves to a kernel impl (DESIGN.md §9) — plus tests/test_kernels.py,
+tests/test_model_dispatch.py and ``benchmarks/run.py --only kernels /
+model-fwd``.
 
-Block-pruning note (hillclimb lever, EXPERIMENTS.md §Perf): with a sliding
-window W << S, most (q_block, k_block) grid steps are fully masked.  The
-kernel still visits them (grid shape is static); the pruned variant reduces
-nk to ceil((W + BQ)/BK) + 1 blocks per q row by shifting the k index map -
-added during the perf pass (see EXPERIMENTS.md §Perf).
+Block pruning: with a sliding window W << S most (q_block, k_block) grid
+steps are fully masked.  ``prune_window`` (default on) shrinks the KV grid
+axis to nkp = ceil((W + BQ)/BK) + 1 blocks per q row via a shifted k index
+map — see ``kernel.flash_gqa_grid`` for the exact grid and
+tests/test_kernels.py::TestFlashGQAPruned for the parity sweep.
+
+Differentiable: the forward pass runs the Pallas kernel; the backward pass
+recomputes attention q-block by q-block (same math as the oracle, one
+``jax.vjp`` per block inside a ``lax.scan`` that accumulates dk/dv in the
+carry), so backward live memory stays O(S·BQ) like the model's blockwise
+forward scan — no full O(S²) score tensor is ever materialised.  A fused
+flash backward *kernel* is a future perf item.  Under ``remat="block"``
+the recomputed forward stays on the kernel path.
 """
 from __future__ import annotations
 
@@ -22,18 +32,92 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_gqa.kernel import flash_gqa_pallas
+from repro.kernels.flash_gqa.kernel import _block_sizes, flash_gqa_pallas
+from repro.kernels.flash_gqa.ref import NEG_INF
 
 
-@functools.partial(
-    jax.jit, static_argnames=("window", "softcap", "scale", "bq", "bk", "interpret")
-)
-def flash_gqa(q, k, v, window=None, softcap=None, scale=None,
-              bq: int = 512, bk: int = 512, interpret: bool = False):
-    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D).  Causal GQA attention."""
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret, prune_window):
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
     out = flash_gqa_pallas(qt, kt, vt, window=window, softcap=softcap,
-                           scale=scale, bq=bq, bk=bk, interpret=interpret)
+                           scale=scale, bq=bq, bk=bk, interpret=interpret,
+                           prune_window=prune_window)
     return jnp.swapaxes(out, 1, 2)
+
+
+def _flash_gqa_fwd(q, k, v, window, softcap, scale, bq, bk, interpret,
+                   prune_window):
+    out = _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret,
+                     prune_window)
+    return out, (q, k, v)
+
+
+def _flash_gqa_bwd(window, softcap, scale, bq, bk, interpret, prune_window,
+                   res, g):
+    """Blockwise backward: for each q block, recompute its attention (the
+    oracle math, f32) and pull the cotangent back through it; dk/dv are
+    accumulated across blocks in the scan carry.  Positions are the
+    canonical arange(S) the kernel's masks assume."""
+    q, k, v = res  # (B,S,H,D), (B,S,KV,D)
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    grp = h // kvh
+    sc = scale if scale is not None else d**-0.5
+
+    qb, _, nb, _ = _block_sizes(s, bq, bk)
+
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(s)
+
+    def block_out(qblk, kk, vv, qpos):
+        """qblk (B,qb,H,D) f32 attending over all S keys -> (B,qb,H,D)."""
+        qg = qblk.reshape(b, qb, kvh, grp, d)
+        sc_ = jnp.einsum("bqkgd,btkd->bqkgt", qg, kk) * sc
+        if softcap is not None:
+            sc_ = softcap * jnp.tanh(sc_ / softcap)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        sc_ = jnp.where(mask[None, :, None, None, :], sc_, NEG_INF)
+        w = jax.nn.softmax(sc_, axis=-1)
+        o = jnp.einsum("bqkgt,btkd->bqkgd", w, vv)
+        return o.reshape(b, qb, h, d)
+
+    q_blocks = jnp.moveaxis(
+        q.astype(jnp.float32).reshape(b, nb, qb, h, d), 1, 0)
+    g_blocks = jnp.moveaxis(
+        g.astype(jnp.float32).reshape(b, nb, qb, h, d), 1, 0)
+    pos_blocks = kpos.reshape(nb, qb)
+
+    def body(carry, inp):
+        dk, dv = carry
+        qblk, gblk, qpos = inp
+        _, vjp = jax.vjp(
+            lambda qq, kk, vv: block_out(qq, kk, vv, qpos), qblk, kf, vf)
+        dqb, dki, dvi = vjp(gblk)
+        return (dk + dki, dv + dvi), dqb
+
+    zeros = (jnp.zeros_like(kf), jnp.zeros_like(vf))
+    (dk, dv), dq_blocks = jax.lax.scan(
+        body, zeros, (q_blocks, g_blocks, pos_blocks))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, s, h, d)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_gqa.defvjp(_flash_gqa_fwd, _flash_gqa_bwd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "softcap", "scale", "bq", "bk", "interpret",
+                     "prune_window"),
+)
+def flash_gqa(q, k, v, window=None, softcap=None, scale=None,
+              bq: int = 512, bk: int = 512, interpret: bool = False,
+              prune_window: bool = True):
+    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D).  Causal GQA attention."""
+    return _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret,
+                      prune_window)

@@ -1,9 +1,16 @@
 """Public jit'd wrapper for the rmsnorm kernel (arbitrary leading dims).
 
-Call sites: tests/test_kernels.py and ``benchmarks/run.py --only kernels``
-only — the model zoo (``repro.models.layers.rmsnorm``) still runs the
-plain-jnp norm (mirrored by ref.py).  Routing the transformer stacks
-through the DESIGN.md §9 dispatch layer is a ROADMAP open item.
+Call sites: the model zoo — ``repro.models.layers.rmsnorm`` dispatches
+here for every transformer/MoE/SSM-hybrid norm (ln1/ln2/final_norm and the
+qk-norm) when ``ModelConfig.kernel_impl`` resolves to a kernel impl
+(DESIGN.md §9) — plus tests/test_kernels.py, tests/test_model_dispatch.py
+and ``benchmarks/run.py --only kernels / model-fwd``.
+
+Differentiable: the forward pass runs the fused Pallas kernel; the
+backward pass is the VJP of the jnp oracle (``ref.py``) on the saved
+inputs — same math, reference reduction order.  A fused backward kernel
+is a future perf item; under ``remat="block"`` the recomputed forward
+stays on the kernel path either way.
 """
 from __future__ import annotations
 
@@ -12,12 +19,31 @@ import functools
 import jax
 
 from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
 
-@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
-def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = False):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x, scale, eps, interpret):
     lead = x.shape[:-1]
     d = x.shape[-1]
     flat = x.reshape(-1, d)
     out = rmsnorm_pallas(flat, scale, eps=eps, interpret=interpret)
     return out.reshape(*lead, d)
+
+
+def _rmsnorm_fwd(x, scale, eps, interpret):
+    return _rmsnorm(x, scale, eps, interpret), (x, scale)
+
+
+def _rmsnorm_bwd(eps, interpret, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda xx, ss: rmsnorm_ref(xx, ss, eps), x, scale)
+    return vjp(g)
+
+
+_rmsnorm.defvjp(_rmsnorm_fwd, _rmsnorm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, interpret: bool = False):
+    return _rmsnorm(x, scale, eps, interpret)

@@ -26,9 +26,13 @@ def main():
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "reference", "kernel", "kernel_interpret"],
+                    help="model-zoo kernel policy (rmsnorm/flash_gqa, "
+                         "DESIGN.md §9); auto = kernel on TPU")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch, reduced=True)
+    cfg = get_config(args.arch, reduced=True).replace(kernel_impl=args.kernel_impl)
     mesh = make_host_mesh()
     shape = InputShape("custom_decode", args.capacity, args.batch, "decode")
     serve_step = jax.jit(st.make_serve_step(cfg, shape))

@@ -42,9 +42,14 @@ def main():
                     help="use the 16x16 mesh (requires 256 devices)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "reference", "kernel", "kernel_interpret"],
+                    help="model-zoo kernel policy (rmsnorm/flash_gqa, "
+                         "DESIGN.md §9); auto = kernel on TPU")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    cfg = cfg.replace(kernel_impl=args.kernel_impl)
     if cfg.frontend != "none":
         raise SystemExit("text archs only in this driver")
     mesh = make_production_mesh() if args.production_mesh else make_host_mesh()

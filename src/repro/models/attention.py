@@ -7,6 +7,16 @@ score tensor at (B, q_block, H, S) instead of (B, S, H, S), which is what
 makes 32k prefill fit in HBM; the Pallas kernel in repro/kernels/flash_gqa
 is the TPU-tiled version of the same computation (tested against
 repro/kernels/flash_gqa/ref.py which mirrors this math).
+
+``ModelConfig.kernel_impl`` (DESIGN.md §9) selects the training/prefill
+implementation: "reference" runs the blockwise scan below, kernel impls
+dispatch ``attention_fwd`` to the fused Pallas kernel (window-pruned KV
+grid for sliding-window layers).  The kernel path assumes the canonical
+positions every model entry point passes (arange(S) per row — its
+causality/window masks come from block indices); callers with exotic
+position tensors must stay on the reference path.  Decode stays on the
+jnp path: a single-token query against a ring-buffer cache is
+gather/bandwidth bound, not a tiled-matmul shape.
 """
 from __future__ import annotations
 
@@ -14,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import resolve_impl
 from repro.models.layers import dense_init, rmsnorm_init, rmsnorm, rope, softcap
 
 NEG_INF = -1e30
@@ -39,8 +50,9 @@ def _project_qkv(p, cfg, x, positions, rope_base):
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     if cfg.use_qk_norm:
-        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
-        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+        impl = getattr(cfg, "kernel_impl", "reference")
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps, impl=impl)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps, impl=impl)
     q = rope(q, positions, rope_base)
     k = rope(k, positions, rope_base)
     return q, k, v
@@ -71,11 +83,22 @@ def attention_fwd(p, cfg, x, positions, window, rope_base, q_block=512):
     """Training / prefill self-attention (causal, optional sliding window).
 
     x: (B,S,D) already layer-normed;  positions: (B,S) int32.
-    Scans over query blocks to bound live memory.
+    Scans over query blocks to bound live memory; kernel impls
+    (``cfg.kernel_impl``) dispatch the same computation to the fused
+    Pallas flash_gqa kernel instead.
     """
     b, s, d = x.shape
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q, k, v = _project_qkv(p, cfg, x, positions, rope_base)
+
+    impl = resolve_impl(getattr(cfg, "kernel_impl", "reference"), "flash_gqa")
+    if impl != "reference":
+        from repro.kernels.flash_gqa.ops import flash_gqa
+
+        o = flash_gqa(q, k, v, window=window, softcap=cfg.attn_softcap,
+                      bq=q_block, bk=q_block,
+                      interpret=impl == "kernel_interpret")
+        return jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
 
     qb = min(q_block, s)
     while s % qb:

@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.dispatch import resolve_impl
+
 
 def dense_init(key, shape, in_axis_size, dtype, scale=1.0):
     """Variance-scaling (fan-in) normal init."""
@@ -30,7 +32,21 @@ def rmsnorm_init(d, dtype):
     return {"scale": jnp.zeros((d,), dtype)}  # (1 + scale) parametrisation
 
 
-def rmsnorm(p, x, eps=1e-6):
+def rmsnorm(p, x, eps=1e-6, impl="reference"):
+    """(1 + scale)-parametrised RMSNorm, f32 reduce.
+
+    ``impl`` is the model-level kernel policy (``ModelConfig.kernel_impl``,
+    DESIGN.md §9), resolved host-side: "reference" runs the plain-jnp math
+    below, kernel impls dispatch to the fused Pallas kernel
+    (repro.kernels.rmsnorm) — same math, same (1 + scale) parametrisation,
+    one VMEM pass.
+    """
+    impl = resolve_impl(impl, "rmsnorm")
+    if impl != "reference":
+        from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_kernel
+
+        return rmsnorm_kernel(x, p["scale"], eps=eps,
+                              interpret=impl == "kernel_interpret")
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

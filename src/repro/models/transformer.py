@@ -49,6 +49,13 @@ def _dtype(cfg):
     return jnp.dtype(cfg.dtype)
 
 
+def _norm(p, cfg, x):
+    """Every stack norm routes through the model-level kernel policy
+    (``cfg.kernel_impl``, DESIGN.md §9) — one helper instead of per-call
+    plumbing at the 12 ln1/ln2/final_norm sites."""
+    return rmsnorm(p, x, cfg.norm_eps, impl=getattr(cfg, "kernel_impl", "reference"))
+
+
 # ---------------------------------------------------------------------------
 # Long-context variant (the one documented carve-in for dense archs)
 # ---------------------------------------------------------------------------
@@ -101,11 +108,11 @@ def _block_fwd(p, spec, cfg, x, positions):
     """Full-sequence (train/prefill) sublayer.  Returns (x, aux_loss)."""
     aux = jnp.float32(0.0)
     if spec.kind == "ssm":
-        return x + ssm_mod.ssm_forward(p["ssm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps)), aux
-    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        return x + ssm_mod.ssm_forward(p["ssm"], cfg, _norm(p["ln1"], cfg, x)), aux
+    h = _norm(p["ln1"], cfg, x)
     x = x + attn_mod.attention_fwd(p["attn"], cfg, h, positions, spec.window,
                                    spec.rope_base, q_block=cfg.attn_q_block)
-    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    h = _norm(p["ln2"], cfg, x)
     if spec.kind == "moe":
         y, aux = moe_mod.moe_ffn(p["moe"], cfg, h, getattr(cfg, "moe_impl", "dense"))
         return x + y, aux
@@ -115,12 +122,12 @@ def _block_fwd(p, spec, cfg, x, positions):
 def _block_decode(p, spec, cfg, x, pos, cache):
     """Single-token sublayer.  Returns (x, new_cache)."""
     if spec.kind == "ssm":
-        y, new_cache = ssm_mod.ssm_decode(p["ssm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps), cache)
+        y, new_cache = ssm_mod.ssm_decode(p["ssm"], cfg, _norm(p["ln1"], cfg, x), cache)
         return x + y, new_cache
-    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    h = _norm(p["ln1"], cfg, x)
     y, new_cache = attn_mod.attention_decode(p["attn"], cfg, h, pos, cache, spec.window, spec.rope_base)
     x = x + y
-    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    h = _norm(p["ln2"], cfg, x)
     if spec.kind == "moe":
         y, _ = moe_mod.moe_ffn(p["moe"], cfg, h, getattr(cfg, "moe_impl", "dense"))
         return x + y, new_cache
@@ -271,7 +278,7 @@ def forward(params, cfg, batch):
         x = pin(x)
         aux_total = aux_total + a
 
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = _norm(params["final_norm"], cfg, x)
     return x, aux_total
 
 
@@ -357,7 +364,7 @@ def decode_step(params, cfg, batch, pos, caches):
             tail_caches.append(c)
         new_caches["tail"] = tuple(tail_caches)
 
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = _norm(params["final_norm"], cfg, x)
     return lm_logits(params, cfg, x), new_caches
 
 
@@ -375,9 +382,9 @@ def _block_prefill(p, spec, cfg, x, positions, capacity):
     """
     if spec.kind == "ssm":
         y, cache = ssm_mod.ssm_forward_with_cache(
-            p["ssm"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps))
+            p["ssm"], cfg, _norm(p["ln1"], cfg, x))
         return x + y, cache
-    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    h = _norm(p["ln1"], cfg, x)
     q, k, v = attn_mod._project_qkv(p["attn"], cfg, h, positions, spec.rope_base)
     cap = capacity if spec.window is None else min(spec.window, capacity)
     cache = attn_mod.pack_prefill_cache(cfg, k, v, positions, cap, _dtype(cfg))
@@ -385,7 +392,7 @@ def _block_prefill(p, spec, cfg, x, positions, capacity):
     y = attn_mod.attention_fwd(p["attn"], cfg, h, positions, spec.window,
                                spec.rope_base, q_block=cfg.attn_q_block)
     x = x + y
-    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    h = _norm(p["ln2"], cfg, x)
     if spec.kind == "moe":
         y, _ = moe_mod.moe_ffn(p["moe"], cfg, h, getattr(cfg, "moe_impl", "dense"))
         return x + y, cache
@@ -426,5 +433,5 @@ def prefill_with_caches(params, cfg, batch, capacity=None):
             tail_caches.append(c)
         caches["tail"] = tuple(tail_caches)
 
-    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    x = _norm(params["final_norm"], cfg, x)
     return lm_logits(params, cfg, x[:, -1:, :]), caches

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hyp_compat import given, hst, settings  # optional-hypothesis shim
 
-from repro.kernels.flash_gqa.kernel import flash_gqa_pallas
+from repro.kernels.flash_gqa.kernel import flash_gqa_grid, flash_gqa_pallas
 from repro.kernels.flash_gqa.ops import flash_gqa
 from repro.kernels.flash_gqa.ref import flash_gqa_ref
 from repro.kernels.pfedsop_update.ops import (
@@ -218,6 +218,24 @@ class TestFlashGQA:
                           jnp.swapaxes(v, 1, 2)), 1, 2)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
 
+    def test_matches_model_attention_kernel_dispatch(self):
+        """attention_fwd with kernel_impl="kernel_interpret" routes here:
+        the dispatched model layer == its own reference impl."""
+        from repro.configs import get_config
+        from repro.models import attention as am
+
+        cfg = get_config("gemma2-9b", reduced=True)
+        b, s = 1, 64
+        x = jax.random.normal(jax.random.PRNGKey(0), (b, s, cfg.d_model), jnp.float32)
+        p = am.attn_init(jax.random.PRNGKey(1), cfg, jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        ref = am.attention_fwd(p, cfg.replace(kernel_impl="reference"),
+                               x, pos, window=32, rope_base=10_000.0, q_block=32)
+        out = am.attention_fwd(p, cfg.replace(kernel_impl="kernel_interpret"),
+                               x, pos, window=32, rope_base=10_000.0, q_block=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
     def test_matches_model_attention_math(self):
         """Kernel == the model layer's blockwise attention (same math)."""
         from repro.configs import get_config
@@ -233,3 +251,85 @@ class TestFlashGQA:
         out = flash_gqa(q, k, v, softcap=cfg.attn_softcap, bq=32, bk=32, interpret=True)
         out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+class TestFlashGQAPruned:
+    """Window-aware block-pruned KV grid: for sliding-window layers the
+    kernel visits nkp = ceil((W+BQ)/BK)+1 k-blocks per q row instead of
+    S/BK.  Parity is pruned vs unpruned vs reference, on window sizes
+    smaller than, equal to, and not a multiple of the k-block size."""
+
+    BK = 32
+    # window: smaller than BK / equal to BK / not a multiple of BK
+    WINDOWS = [16, 32, 40]
+
+    def _qkv(self, s=256, d=64):
+        ks = jax.random.split(jax.random.PRNGKey(s), 3)
+        q = jax.random.normal(ks[0], (1, 4, s, d))
+        k = jax.random.normal(ks[1], (1, 2, s, d))
+        v = jax.random.normal(ks[2], (1, 2, s, d))
+        return q, k, v
+
+    @pytest.mark.parametrize("window", WINDOWS)
+    def test_pruned_vs_unpruned_vs_ref(self, window):
+        q, k, v = self._qkv()
+        ref = flash_gqa_ref(q, k, v, window=window)
+        pruned = flash_gqa_pallas(q, k, v, window=window, bq=self.BK,
+                                  bk=self.BK, interpret=True, prune_window=True)
+        unpruned = flash_gqa_pallas(q, k, v, window=window, bq=self.BK,
+                                    bk=self.BK, interpret=True,
+                                    prune_window=False)
+        np.testing.assert_allclose(np.asarray(pruned), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(pruned), np.asarray(unpruned),
+                                   rtol=1e-6, atol=1e-7)
+
+    @pytest.mark.parametrize("window", WINDOWS)
+    def test_grid_visits_fewer_k_blocks(self, window):
+        s = 256
+        nq_p, nk_p = flash_gqa_grid(s, self.BK, self.BK, window=window)
+        nq_u, nk_u = flash_gqa_grid(s, self.BK, self.BK, window=window,
+                                    prune_window=False)
+        assert nq_p == nq_u
+        assert nk_p < nk_u == s // self.BK
+        # the flagged formula: nkp = ceil((W + BQ)/BK) + 1, capped at nk
+        assert nk_p == min(s // self.BK, -(-(window + self.BK) // self.BK) + 1)
+
+    def test_window_covering_sequence_disables_pruning(self):
+        """W >= S: every k block is live, so the pruned grid must equal the
+        unpruned one (no degenerate shrink)."""
+        s = 128
+        assert flash_gqa_grid(s, 32, 32, window=s) == \
+            flash_gqa_grid(s, 32, 32, window=s, prune_window=False)
+
+    def test_softcap_and_gqa_through_pruned_grid(self):
+        q, k, v = self._qkv(s=128)
+        ref = flash_gqa_ref(q, k, v, window=24, softcap=30.0)
+        out = flash_gqa_pallas(q, k, v, window=24, softcap=30.0, bq=16,
+                               bk=32, interpret=True, prune_window=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+    def test_ops_wrapper_grad_through_pruned_kernel(self):
+        """The (B,S,H,D) wrapper is differentiable (reference-VJP backward):
+        grads through the pruned kernel match grads through the oracle."""
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        s, d = 64, 32
+        q = jax.random.normal(ks[0], (1, s, 4, d))
+        k = jax.random.normal(ks[1], (1, s, 2, d))
+        v = jax.random.normal(ks[2], (1, s, 2, d))
+
+        def loss_kernel(q, k, v):
+            return jnp.sum(flash_gqa(q, k, v, window=16, bq=16, bk=16,
+                                     interpret=True) ** 2)
+
+        def loss_ref(q, k, v):
+            out = flash_gqa_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                                jnp.swapaxes(v, 1, 2), window=16)
+            return jnp.sum(out ** 2)
+
+        g_k = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+        g_r = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g_k, g_r):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
