@@ -11,6 +11,17 @@ Examples:
       --rounds 30 --clients 20 --partition pathological
   PYTHONPATH=src python examples/train_federated.py --paper-scale       # K=100, 20%%, T=100
 
+  # asynchronous federation (DESIGN.md §10): heterogeneous client speeds,
+  # 30%% availability, FedBuff-style buffered staleness-weighted updates
+  PYTHONPATH=src python examples/train_federated.py --mode async \
+      --speed lognormal --availability 0.3 --buffer-size 4
+
+  # checkpoint every 5 server updates and resume an interrupted run
+  PYTHONPATH=src python examples/train_federated.py --mode async \
+      --ckpt-every 5 --ckpt-dir experiments/ckpt/demo
+  PYTHONPATH=src python examples/train_federated.py --mode async \
+      --ckpt-every 5 --ckpt-dir experiments/ckpt/demo --resume
+
 Writes per-method histories to experiments/fl/<tag>.json (consumed by
 benchmarks/run.py for the Table II/III/IV analogs).
 """
@@ -32,10 +43,17 @@ from repro.data import (
     make_class_conditional_images,
     pathological_partition,
 )
-from repro.fl import Federation, FLRunConfig
+from repro.fl import (
+    AsyncConfig,
+    AsyncFederation,
+    AvailabilityConfig,
+    ClientAvailability,
+    Federation,
+    FLRunConfig,
+)
 from repro.fl.runtime import masked_accuracy
 from repro.models import cnn
-from repro.utils.checkpoint import save_checkpoint
+from repro.utils.checkpoint import latest_step, save_checkpoint
 
 
 def build_method(name, lr, args):
@@ -91,9 +109,46 @@ def main():
     ap.add_argument("--model", choices=["small", "resnet9"], default="small")
     ap.add_argument("--paper-scale", action="store_true",
                     help="K=100 clients, 20%% participation, 100 rounds (slow on CPU)")
-    ap.add_argument("--checkpoint-dir", default=None)
+    # -- async federation (DESIGN.md §10) ---------------------------------
+    ap.add_argument("--mode", choices=["sync", "async"], default="sync",
+                    help="sync: bulk-synchronous rounds (the paper's setup); "
+                         "async: availability-aware discrete-event simulation "
+                         "with FedBuff-style buffered staleness-weighted "
+                         "aggregation (DESIGN.md §10). 'rounds' then counts "
+                         "applied server updates")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: uploads per server update (0 = K', the "
+                         "sync-degenerate setting)")
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="async: clients kept in flight (0 = K')")
+    ap.add_argument("--speed", choices=["fixed", "lognormal"], default="fixed",
+                    help="per-client compute-speed model (both modes: async "
+                         "scheduling / sync simulated round clock)")
+    ap.add_argument("--speed-sigma", type=float, default=1.0,
+                    help="lognormal sigma of the per-client speed multipliers")
+    ap.add_argument("--mean-duration", type=float, default=1.0,
+                    help="median simulated client round duration (sim seconds)")
+    ap.add_argument("--availability", type=float, default=1.0,
+                    help="steady-state online fraction per client (1.0 = "
+                         "always on); exponential on/off traces")
+    ap.add_argument("--mean-on", type=float, default=10.0,
+                    help="mean online-stretch length (sim seconds)")
+    # -- checkpointing ----------------------------------------------------
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint the full driver state every N applied "
+                         "server updates (0 = off); see repro.utils.checkpoint")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="checkpoint directory (per-method subdirs)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume each method from its latest checkpoint under "
+                         "--ckpt-dir (bitwise-identical continuation)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="legacy: save only the final broadcast per method")
     ap.add_argument("--tag", default="run")
     args = ap.parse_args()
+
+    if args.resume and not args.ckpt_dir:
+        ap.error("--resume requires --ckpt-dir")
 
     if args.update_impl and not any(m.startswith("pfedsop") for m in args.methods):
         ap.error("--update-impl targets the pFedSOP round-start update; none of "
@@ -122,11 +177,22 @@ def main():
     acc = masked_accuracy(lambda p, t: cnn.apply(p, cfg, t["images"]))
     params = cnn.init_params(jax.random.PRNGKey(args.seed), cfg)  # same init for all
 
+    avail_cfg = AvailabilityConfig(
+        speed=args.speed, mean_duration=args.mean_duration,
+        sigma=args.speed_sigma, availability=args.availability,
+        mean_on=args.mean_on,
+    )
+    async_cfg = AsyncConfig(
+        buffer_size=args.buffer_size, concurrency=args.concurrency,
+        availability=avail_cfg,
+    )
     run_cfg = FLRunConfig(
         n_clients=args.clients, participation=args.participation,
         rounds=args.rounds, batch=args.batch, seed=args.seed,
         backend=args.backend, shards=args.shards,
         update_impl=args.update_impl,
+        ckpt_every=args.ckpt_every,
+        async_cfg=async_cfg,
     )
 
     out_dir = Path("experiments/fl")
@@ -137,12 +203,26 @@ def main():
         # have no kernel dispatch path, so the override stays off for them
         # (an FLRunConfig-level override on a knob-less method is an error).
         cfg_m = run_cfg if name.startswith("pfedsop") else replace(run_cfg, update_impl="")
-        fed = Federation(build_method(name, args.lr, args), loss, acc, params,
-                         data, cfg_m)
+        if args.ckpt_dir:
+            cfg_m = replace(cfg_m, ckpt_dir=str(Path(args.ckpt_dir) / name))
+        method = build_method(name, args.lr, args)
+        if args.mode == "async":
+            fed = AsyncFederation(method, loss, acc, params, data, cfg_m)
+        else:
+            # the sync driver stays availability-oblivious (it samples and
+            # waits for stragglers) but uses the same heterogeneity model
+            # for its simulated clock, so sim_time is comparable
+            model = ClientAvailability(avail_cfg, args.clients, args.seed)
+            fed = Federation(method, loss, acc, params, data, cfg_m,
+                             availability=model)
+        if args.resume and latest_step(cfg_m.ckpt_dir) is not None:
+            at = fed.restore()
+            print(f"[{name}] resumed from {cfg_m.ckpt_dir} at round {at}")
         hist = fed.run(verbose=True)
         results[name] = hist
         print(f"--> {name}: mean best acc {hist['mean_best_acc']:.4f}, "
-              f"mean round time {np.mean(hist['round_time'][1:]):.2f}s")
+              f"mean round time {np.mean(hist['round_time'][1:]):.2f}s, "
+              f"sim wall-clock {hist['sim_time'][-1]:.1f}")
         if args.checkpoint_dir:
             save_checkpoint(Path(args.checkpoint_dir) / name, args.rounds,
                             {"broadcast": fed.broadcast},

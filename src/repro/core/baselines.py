@@ -51,6 +51,19 @@ class FLMethod(Protocol):
         leaf).  Under the shard_map backend that axis is device-sharded,
         so reductions over it compile to cross-shard psums (Eq. 13 of
         PAPER.md for pFedSOP's mean).
+    server_update_stale(broadcast, uploads, staleness) -> new_broadcast
+        Buffered/asynchronous aggregation (DESIGN.md §10): like
+        ``server_update``, but upload i additionally carries its staleness
+        tau_i (int32, shape (B,)) -- the number of server versions applied
+        since that client was dispatched.  MUST reduce to ``server_update``
+        bit-exactly when every tau is 0 (a buffer of fresh uploads); that
+        identity is what makes the degenerate async configuration reproduce
+        the synchronous history bitwise (tests/test_async_federation.py).
+        The FedAvg-family default wraps ``server_update`` in a mean-one
+        normalized polynomial staleness discount (``staleness_weights``);
+        pFedSOP instead composes the discount with the Gompertz angle
+        weight (``repro.core.pfedsop.stale_blend``) so stale deltas are
+        down-blended toward the global update, not just down-averaged.
     eval_params(state, broadcast) -> params
         The parameters a client deploys for local test accuracy
         (personalized methods return per-client params; FedAvg-family
@@ -70,7 +83,24 @@ class FLMethod(Protocol):
 
     def server_update(self, broadcast, uploads): ...
 
+    def server_update_stale(self, broadcast, uploads, staleness): ...
+
     def eval_params(self, state, broadcast) -> Pytree: ...
+
+
+def staleness_weights(staleness, exponent):
+    """Mean-one normalized polynomial staleness weights, f32 (B,).
+
+    w_i = s_i / mean(s) with s_i = (1 + tau_i)^(-exponent)
+    (``repro.core.pfedsop.staleness_discount``).  Normalizing to mean one
+    keeps a weighted mean an affine combination -- FedAvg-family uploads
+    are full parameter vectors, so an unnormalized discount would shrink
+    the averaged model toward zero.  An all-fresh buffer (tau = 0 ->
+    s = 1.0 exactly) yields exactly 1.0 per upload, preserving the
+    sync-degenerate bitwise identity of ``server_update_stale``.
+    """
+    s = pf.staleness_discount(staleness, exponent)
+    return s / jnp.mean(s)
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +156,9 @@ def local_train(
 class FedAvg:
     lr: float = 0.01
     name: str = "fedavg"
+    # polynomial staleness-discount exponent for the async aggregation hook
+    # (server_update_stale, DESIGN.md §10); unused by the synchronous driver.
+    staleness_exp: float = 0.5
 
     def init_client(self, params):
         return {}
@@ -139,6 +172,19 @@ class FedAvg:
 
     def server_update(self, broadcast, uploads):
         return jax.tree.map(lambda u: jnp.mean(u.astype(jnp.float32), 0).astype(u.dtype), uploads)
+
+    def server_update_stale(self, broadcast, uploads, staleness):
+        """Default staleness hook: normalized polynomial discount wrapping
+        ``server_update`` (shared by the whole FedAvg family -- the
+        subclasses only change ``client_round``/``server_update``, which
+        this wrapper composes with).  See FLMethod for the contract."""
+        w = staleness_weights(staleness, self.staleness_exp)
+        scaled = jax.tree.map(
+            lambda u: (u.astype(jnp.float32)
+                       * w.reshape((-1,) + (1,) * (u.ndim - 1))).astype(u.dtype),
+            uploads,
+        )
+        return self.server_update(broadcast, scaled)
 
     def eval_params(self, state, broadcast):
         return broadcast
@@ -309,6 +355,25 @@ class PFedSOP:
     def server_update(self, broadcast, uploads):
         return {
             "delta": pf.server_aggregate(uploads),
+            "has_delta": jnp.asarray(True),
+        }
+
+    def server_update_stale(self, broadcast, uploads, staleness):
+        """Staleness-composed aggregation (DESIGN.md §10): each upload is
+        down-blended toward the current global delta with weight
+        (1 - s(tau)) * (1 - beta) -- the polynomial discount composed with
+        the Gompertz angle weight (``repro.core.pfedsop.stale_blend``) --
+        before the usual Eq. 13 mean.  Fresh uploads (tau = 0) pass through
+        bit-exactly.  This runs on the server (cold) path only, so the
+        fused round-start update keeps dispatching through the §9 kernel
+        layer unchanged."""
+        s = pf.staleness_discount(staleness, self.cfg.staleness_exp)
+        blended = jax.vmap(
+            lambda u, si: pf.stale_blend(u, broadcast["delta"], si,
+                                         self.cfg.lam, self.cfg.eps)
+        )(uploads, s)
+        return {
+            "delta": pf.server_aggregate(blended),
             "has_delta": jnp.asarray(True),
         }
 

@@ -77,6 +77,10 @@ class PFedSOPConfig:
     local_iters: int = 0  # T; 0 = derive from data (one epoch)
     use_pc: bool = True  # personalization component (ablation Table III)
     eps: float = 1e-12  # cosine-similarity guard
+    # async aggregation only (DESIGN.md §10): exponent of the polynomial
+    # staleness discount composed with the Gompertz weight in stale_blend;
+    # irrelevant to the synchronous driver (staleness is identically zero).
+    staleness_exp: float = 0.5
     # round-start update implementation (repro.kernels.dispatch, DESIGN.md
     # §9): "auto" = fused Pallas kernel on TPU, pytree reference elsewhere;
     # "reference" / "kernel" / "kernel_interpret" force one path.
@@ -315,3 +319,43 @@ def client_round(
 def server_aggregate(deltas: Pytree) -> Pytree:
     """Eq. 13: mean over the client axis (leading axis of every leaf)."""
     return jax.tree.map(lambda d: jnp.mean(d.astype(jnp.float32), axis=0), deltas)
+
+
+# ---------------------------------------------------------------------------
+# Staleness-weighted aggregation (async federation, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def staleness_discount(staleness, exponent):
+    """FedBuff-style polynomial discount s(tau) = (1 + tau)^(-exponent), f32.
+
+    ``staleness`` counts server versions elapsed since the upload's client
+    was dispatched.  tau = 0 yields exactly 1.0 (1^x == 1 in IEEE), which is
+    what lets a buffer of fresh uploads aggregate bit-identically to the
+    synchronous path -- the degenerate-sync anchor of the async subsystem.
+    """
+    tau = jnp.asarray(staleness, jnp.float32)
+    return (1.0 + tau) ** jnp.float32(-exponent)
+
+
+def stale_blend(upload, global_delta, discount, lam, eps=1e-12):
+    """Down-blend ONE stale local delta toward the current global delta.
+
+    Composes the staleness discount s(tau) with the Gompertz-normalized
+    angle weight (Eq. 14):
+
+        c       = (1 - s) * (1 - beta)
+        blended = (1 - c) * upload + c * global_delta
+
+    beta is Eq. 14's trust-toward-global weight -- large when the upload
+    agrees with the current global direction -- so (1 - beta) measures
+    disagreement.  A stale AND conflicting delta is pulled hardest toward
+    the global consensus; a fresh upload (s = 1 -> c = 0) passes through
+    bit-exactly.  Feeding the blended deltas to the Eq. 13 mean
+    down-*blends* staleness into the aggregate instead of merely
+    down-averaging it (the generic FedAvg-family default in
+    ``repro.core.baselines``).
+    """
+    beta, _ = gompertz_weight(upload, global_delta, lam, eps)
+    c = (1.0 - discount) * (1.0 - beta)
+    return tree_lerp(c, upload, global_delta)

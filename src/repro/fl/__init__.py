@@ -1,8 +1,16 @@
 """FL runtime: backend-pluggable federation engine (vmap / shard_map).
 
-``Federation`` drives the round loop; the engine backend (DESIGN.md §3)
-decides where the per-client phase runs.  See README.md for the repo map.
+``Federation`` drives the synchronous round loop; ``AsyncFederation``
+(DESIGN.md §10) replaces it with an availability-aware discrete-event
+simulation with FedBuff-style staleness-weighted buffered aggregation.
+Both share the jitted phase programs in ``repro.fl.runtime.RoundPrograms``
+and the engine backends (DESIGN.md §3).  See README.md for the repo map.
 """
+from repro.fl.async_ import AsyncConfig, AsyncFederation  # noqa: F401
+from repro.fl.availability import (  # noqa: F401
+    AvailabilityConfig,
+    ClientAvailability,
+)
 from repro.fl.engine import (  # noqa: F401
     BACKENDS,
     FederationEngine,
@@ -14,6 +22,8 @@ from repro.fl.engine import (  # noqa: F401
 from repro.fl.runtime import (  # noqa: F401
     Federation,
     FLRunConfig,
+    RoundPrograms,
     override_update_impl,
     validate_method,
 )
+from repro.fl.scheduler import RoundScheduler  # noqa: F401

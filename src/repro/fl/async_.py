@@ -1,0 +1,396 @@
+"""Asynchronous federation driver: FedBuff-style buffered aggregation over
+an availability-aware discrete-event scheduler (DESIGN.md §10).
+
+The synchronous driver (``repro.fl.runtime.Federation``) models the
+idealized bulk-synchronous world: every sampled client finishes instantly
+and the server waits for the full cohort.  ``AsyncFederation`` replaces
+the round loop with a simulated-time event loop over the same building
+blocks:
+
+- ``repro.fl.availability`` supplies per-client speeds and on/off traces
+  (seeded independently of the participation RNG);
+- ``repro.fl.scheduler`` dispatches work to online idle clients in
+  *micro-cohorts* (grouped same-broadcast dispatches) and collects
+  uploads at their simulated completion times;
+- the server applies an update whenever ``buffer_size`` uploads have
+  accumulated; each upload carries its staleness tau (server versions
+  elapsed since its dispatch) into the method's ``server_update_stale``
+  hook (``repro.core.baselines.FLMethod``).
+
+The hot path is unchanged: micro-cohorts run through the SAME jitted
+phase programs (``repro.fl.runtime.RoundPrograms``) and therefore the
+same ``FederationEngine`` backends and §9 kernel dispatch as the
+synchronous driver — the event loop is host-side python, and programs
+are cached per cohort size so recompilation is bounded by the distinct
+cohort sizes seen.
+
+Correctness anchor: with the degenerate configuration — every client
+always online at uniform speed, ``concurrency = buffer_size = K'`` — the
+event loop collapses to lockstep rounds that feed identical operands to
+identical programs in identical order, so the loss/acc history matches
+the synchronous driver *bitwise* on the same seed, under both engine
+backends (tests/test_async_federation.py).  Three properties carry that
+guarantee: grouped dispatch consumes the participation RNG exactly like
+the synchronous sampler (see ``RoundScheduler.dispatch_group``), the
+heterogeneity model draws from its own seeded streams, and an all-fresh
+buffer takes the plain aggregation program (the staleness hook is the
+identity at tau = 0 — itself asserted bitwise in the tests).
+
+History semantics: one entry per *applied server update* (version), so
+"rounds" budgets are comparable across drivers; ``sim_time`` is the
+simulated wall-clock at which each update was applied — the metric the
+``async-engine`` bench compares against the synchronous driver's
+straggler-bound clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.availability import AvailabilityConfig, ClientAvailability
+from repro.fl.runtime import Federation, FLRunConfig
+from repro.fl.scheduler import RoundScheduler
+from repro.utils.checkpoint import load_checkpoint, read_manifest, save_checkpoint
+
+Pytree = Any
+
+# event-loop steps without an applied server update before we declare the
+# simulation wedged (a generous bound: every step dispatches, advances the
+# clock, or delivers, so real configurations flush far sooner)
+_MAX_IDLE_STEPS = 100_000
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Async-subsystem knobs, nested under ``FLRunConfig.async_cfg``.
+
+    The defaults are the sync-degenerate configuration: ``buffer_size``
+    and ``concurrency`` of 0 resolve to K' (the synchronous cohort size),
+    and the default ``AvailabilityConfig`` is always-online uniform speed.
+    """
+
+    buffer_size: int = 0  # uploads per server update; 0 = K'
+    concurrency: int = 0  # clients kept in flight; 0 = K'
+    availability: AvailabilityConfig = field(default_factory=AvailabilityConfig)
+
+
+class AsyncFederation(Federation):
+    """Buffered asynchronous federation over a simulated client population.
+
+    Construction mirrors ``Federation`` (same method/loss/acc/data/config
+    contract) plus an ``AsyncConfig`` — either passed explicitly or nested
+    as ``run_cfg.async_cfg``.  ``run()`` executes until
+    ``run_cfg.rounds`` server updates have been applied.
+    """
+
+    _strict_shards = False  # micro-cohorts may not divide a requested split
+
+    def __init__(self, method, loss_fn, acc_fn, init_params, data,
+                 run_cfg: FLRunConfig, async_cfg: Optional[AsyncConfig] = None):
+        self._init_core(method, loss_fn, acc_fn, init_params, data, run_cfg)
+        acfg = async_cfg or run_cfg.async_cfg or AsyncConfig()
+        if not isinstance(acfg, AsyncConfig):
+            raise TypeError(f"async_cfg must be an AsyncConfig, got {type(acfg)}")
+        self.async_cfg = acfg
+        self.buffer_size = acfg.buffer_size or self.kprime
+        self.concurrency = acfg.concurrency or self.kprime
+        if self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, got {self.buffer_size}")
+        self.availability = ClientAvailability(
+            acfg.availability, run_cfg.n_clients, run_cfg.seed
+        )
+        self.scheduler = RoundScheduler(self.availability, self.concurrency)
+        # in-flight results, computed at dispatch (the simulator needs no
+        # delayed compute — only delayed *delivery*): client -> slices
+        self._pending: Dict[int, dict] = {}
+        # completed uploads awaiting aggregation (FedBuff buffer), in
+        # delivery order: dicts of (client, upload, loss, acc, version)
+        self._buffer: List[dict] = []
+        self._history["staleness"] = []
+        self._t0 = time.perf_counter()
+
+    @property
+    def version(self) -> int:
+        """Applied server updates so far (the FedBuff 'server version')."""
+        return self._round
+
+    # -- event loop --------------------------------------------------------
+
+    def run(self, verbose: bool = False):
+        self._t0 = time.perf_counter()
+        idle = 0
+        while self._round < self.cfg.rounds:
+            v0 = self._round
+            self._step()
+            idle = 0 if self._round > v0 else idle + 1
+            if idle > _MAX_IDLE_STEPS:
+                raise RuntimeError(
+                    f"async event loop made no progress for {idle} steps "
+                    f"(version {self._round}, sim_time {self.sim_time}); "
+                    "check the availability configuration"
+                )
+            if verbose and self._round > v0 and (
+                    self._round % 10 == 0 or self._round == self.cfg.rounds):
+                print(
+                    f"[{self.method.name}/async] version {self._round:4d} "
+                    f"loss={self._history['loss'][-1]:.4f} "
+                    f"acc={self._history['acc'][-1]:.4f} "
+                    f"sim_t={self.sim_time:.2f} "
+                    f"tau={self._history['staleness'][-1]:.2f}"
+                )
+        history = self._finalize_history()
+        history["engine"] = {
+            **self.programs.engine(self.kprime).describe(),
+            "mode": "async",
+            "buffer_size": self.buffer_size,
+            "concurrency": self.concurrency,
+        }
+        return history
+
+    def _step(self):
+        """One event-loop transition: dispatch at the current sim time if
+        possible, else advance the clock to the next event (completion or
+        availability wakeup) and deliver any completions."""
+        ids = self.scheduler.dispatch_group(self.sim_time, self.rng)
+        if len(ids):
+            self._dispatch(ids)
+        tc = self.scheduler.next_completion_time()
+        if tc is None:
+            # nothing in flight: everyone idle is offline; advance to the
+            # earliest on-transition and retry dispatch there
+            tn = self.scheduler.next_dispatch_time(self.sim_time)
+            if tn is None:
+                raise RuntimeError("async scheduler deadlock: no clients in "
+                                   "flight and none coming online")
+            self.sim_time = tn
+            return
+        if self.scheduler.free_slots() > 0:
+            # free slots but every idle client offline: wake early if one
+            # comes online before the next completion (keeps the pipeline
+            # full instead of idling the free slots until a completion)
+            tn = self.scheduler.next_dispatch_time(self.sim_time)
+            if tn is not None and tn < tc:
+                self.sim_time = tn
+                return
+        self.sim_time, done = self.scheduler.pop_completions()
+        self._deliver(done)
+
+    def _dispatch(self, ids: np.ndarray):
+        """Run the micro-cohort's client phase with the CURRENT broadcast.
+
+        Results are computed now (the broadcast version is what matters;
+        delaying the FLOPs would model nothing) but delivered only at
+        each client's simulated completion time.  Batch sampling draws
+        from the shared participation RNG in one grouped call — the same
+        consumption pattern as the synchronous driver.
+        """
+        batches = self.data.sample_round_batches(self.rng, ids, self.T, self.cfg.batch)
+        jids = jnp.asarray(ids)
+        new_states, uploads, metrics = self.programs.client_fn(len(ids))(
+            self.client_states, self.broadcast, jids, batches
+        )
+        losses = np.asarray(metrics["loss"], np.float32)
+        for j, i in enumerate(ids.tolist()):
+            self._pending[i] = {
+                "state": jax.tree.map(lambda x: x[j], new_states),
+                "upload": jax.tree.map(lambda x: x[j], uploads),
+                "loss": losses[j],
+                "version": self._round,
+            }
+
+    def _deliver(self, done: List[int]):
+        """Collect a completed micro-cohort: scatter its post-training
+        states into the K-stack, evaluate against the current broadcast
+        (matching the synchronous pre-update eval semantics), and append
+        its uploads to the aggregation buffer — flushing whenever
+        ``buffer_size`` is reached."""
+        items = [self._pending.pop(i) for i in done]
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[it["state"] for it in items]
+        )
+        dn = np.asarray(done, np.int64)
+        tests = self.data.client_test_set(dn)
+        accs = self.programs.eval_fn(len(done))(stacked, self.broadcast, tests)
+        accs = np.asarray(accs, np.float64)
+        self.best_acc[dn] = np.maximum(self.best_acc[dn], accs)
+        self.participated[dn] = True
+        self.client_states = self.programs.scatter(
+            self.client_states, jnp.asarray(dn), stacked
+        )
+        # append the WHOLE cohort before flushing: a checkpoint written by a
+        # flush must see every delivered upload in the buffer (or already
+        # aggregated) — flushing mid-append would let ckpt_every cut the
+        # not-yet-appended tail of the cohort out of the saved state
+        for it, i, a in zip(items, done, accs):
+            self._buffer.append({
+                "client": int(i),
+                "upload": it["upload"],
+                "loss": it["loss"],
+                "acc": a,
+                "version": it["version"],
+            })
+        while len(self._buffer) >= self.buffer_size:
+            self._flush()
+
+    def _flush(self):
+        """Apply one buffered server update (version += 1)."""
+        items = self._buffer[: self.buffer_size]
+        del self._buffer[: self.buffer_size]
+        uploads = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *[it["upload"] for it in items]
+        )
+        tau = np.asarray([self._round - it["version"] for it in items], np.int64)
+        if tau.any():
+            self.broadcast = self.programs.aggregate_stale(
+                self.broadcast, uploads, jnp.asarray(tau, jnp.int32)
+            )
+        else:
+            # all-fresh buffer: the staleness hook is the identity at
+            # tau = 0 (asserted bitwise in tests/test_async_federation),
+            # so take the plain aggregation program — the same compiled
+            # program the synchronous driver runs, which makes the
+            # sync-degenerate guarantee structural
+            self.broadcast = self.programs.aggregate(self.broadcast, uploads)
+        self._round += 1
+        dt = time.perf_counter() - self._t0
+        self._t0 = time.perf_counter()
+        self._history["loss"].append(
+            float(np.mean(np.asarray([it["loss"] for it in items], np.float32)))
+        )
+        self._history["acc"].append(
+            float(np.mean(np.asarray([it["acc"] for it in items], np.float64)))
+        )
+        self._history["round_time"].append(dt)
+        self._history["sim_time"].append(self.sim_time)
+        self._history["staleness"].append(float(tau.mean()))
+        if (self.cfg.ckpt_every and self.cfg.ckpt_dir
+                and self._round % self.cfg.ckpt_every == 0):
+            self.save(self.cfg.ckpt_dir)
+
+    # -- checkpoint / resume ----------------------------------------------
+
+    def _ckpt_tree(self):
+        tree = super()._ckpt_tree()
+        tree["sched"] = self.scheduler.state()
+        if self._pending:
+            ids = sorted(self._pending)
+            items = [self._pending[i] for i in ids]
+            tree["pending"] = {
+                "ids": np.asarray(ids, np.int64),
+                "versions": np.asarray([it["version"] for it in items], np.int64),
+                "loss": np.asarray([it["loss"] for it in items], np.float32),
+                "states": jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[it["state"] for it in items]
+                ),
+                "uploads": jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[it["upload"] for it in items]
+                ),
+            }
+        if self._buffer:
+            items = self._buffer
+            tree["buffer"] = {
+                "ids": np.asarray([it["client"] for it in items], np.int64),
+                "versions": np.asarray([it["version"] for it in items], np.int64),
+                "loss": np.asarray([it["loss"] for it in items], np.float32),
+                "acc": np.asarray([it["acc"] for it in items], np.float64),
+                "uploads": jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *[it["upload"] for it in items]
+                ),
+            }
+        return tree
+
+    def save(self, ckpt_dir) -> str:
+        return save_checkpoint(
+            ckpt_dir, self._round, self._ckpt_tree(),
+            extra={"round": self._round, "sim_time": self.sim_time,
+                   "driver": "async", "n_pending": len(self._pending),
+                   "n_buffer": len(self._buffer)},
+        )
+
+    def _upload_struct(self):
+        """Upload-pytree structure via eval_shape (no FLOPs, no RNG use):
+        needed to build restore templates for the stacked pending/buffer
+        uploads, whose structure is method-defined (§2)."""
+        throwaway = np.random.RandomState(0)
+        bt = self.data.sample_round_batches(
+            throwaway, np.asarray([0]), self.T, self.cfg.batch
+        )
+        bt = jax.tree.map(lambda x: jnp.asarray(x[0]), bt)
+        proto_state = jax.tree.map(lambda x: x[0], self.client_states)
+        method, loss_fn = self.method, self.loss_fn
+        return jax.eval_shape(
+            lambda s, b, batch: method.client_round(loss_fn, s, b, batch)[1],
+            proto_state, self.broadcast, bt,
+        )
+
+    def restore(self, ckpt_dir=None, step=None) -> int:
+        """Restore a checkpoint written by ``save`` (fresh, identically
+        configured driver), including scheduler heap, in-flight results and
+        the aggregation buffer; the resumed run continues the event loop
+        bit-for-bit (tests/test_checkpoint_resume.py)."""
+        ckpt_dir = ckpt_dir or self.cfg.ckpt_dir
+        manifest = read_manifest(ckpt_dir, step)
+        ex = manifest["extra"]
+        if ex.get("driver") != "async":
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} was written by the "
+                f"{ex.get('driver')!r} driver, not 'async'"
+            )
+        tmpl = self._ckpt_template(bool(ex["n_pending"]), bool(ex["n_buffer"]))
+        tree, extra = load_checkpoint(ckpt_dir, tmpl, step=manifest["step"])
+        self._restore_core(tree, extra)
+        self.scheduler.restore_state(tree["sched"])
+        self._pending = {}
+        if "pending" in tree:
+            p = tree["pending"]
+            losses = np.asarray(p["loss"], np.float32)
+            versions = np.asarray(p["versions"], np.int64)
+            for j, i in enumerate(np.asarray(p["ids"]).tolist()):
+                self._pending[int(i)] = {
+                    "state": jax.tree.map(lambda x: x[j], p["states"]),
+                    "upload": jax.tree.map(lambda x: x[j], p["uploads"]),
+                    "loss": losses[j],
+                    "version": int(versions[j]),
+                }
+        self._buffer = []
+        if "buffer" in tree:
+            b = tree["buffer"]
+            losses = np.asarray(b["loss"], np.float32)
+            accs = np.asarray(b["acc"], np.float64)
+            versions = np.asarray(b["versions"], np.int64)
+            for j, i in enumerate(np.asarray(b["ids"]).tolist()):
+                self._buffer.append({
+                    "client": int(i),
+                    "upload": jax.tree.map(lambda x: x[j], b["uploads"]),
+                    "loss": losses[j],
+                    "acc": accs[j],
+                    "version": int(versions[j]),
+                })
+        return self._round
+
+    def _ckpt_template(self, with_pending: bool = False, with_buffer: bool = False):
+        tmpl = super()._ckpt_template()
+        tmpl["sched"] = self.scheduler.state()
+        if with_pending or with_buffer:
+            upload = self._upload_struct()
+            zero = np.zeros(0, np.int64)
+            if with_pending:
+                tmpl["pending"] = {
+                    "ids": zero, "versions": zero,
+                    "loss": np.zeros(0, np.float32),
+                    "states": self.client_states,
+                    "uploads": upload,
+                }
+            if with_buffer:
+                tmpl["buffer"] = {
+                    "ids": zero, "versions": zero,
+                    "loss": np.zeros(0, np.float32),
+                    "acc": np.zeros(0, np.float64),
+                    "uploads": upload,
+                }
+        return tmpl

@@ -1,0 +1,154 @@
+"""Seeded host-side client-heterogeneity model (DESIGN.md §10).
+
+Production federations are dominated by stragglers and intermittent
+availability, not FLOPs: clients differ in compute speed by orders of
+magnitude and are online only a fraction of the time.  This module gives
+the simulator a *clock* for that world — per-client round durations
+(lognormal across clients) and on/off availability traces — without
+touching the federation's numerics:
+
+- **Deterministic per seed, independent streams.**  Every draw comes from
+  RandomStates keyed by ``(seed, purpose[, client])``, never from the
+  federation's participation RNG.  Enabling heterogeneity therefore never
+  perturbs cohort or batch sampling — the property the sync-degenerate
+  bitwise guarantee of ``repro.fl.async_`` rests on.
+- **Pure function of the seed.**  Speeds are drawn once at construction;
+  on/off traces are generated lazily per client from per-client
+  RandomStates and only ever *extended* forward, so any query order (and
+  any checkpoint/restore cut) observes the same trace.  Checkpointing the
+  model needs no state.
+- **Degenerate-cheap.**  ``availability=1.0`` and ``speed="fixed"`` skip
+  the trace machinery entirely: every client is always online with the
+  same constant duration — the configuration under which the async driver
+  reproduces the synchronous history bitwise.
+
+``ClientAvailability.sync_round_duration`` is the bulk-synchronous cost
+model used by the sync driver's simulated clock: the server samples
+obliviously and waits for every sampled client to come online and finish,
+so one round costs max_i(wait_i + duration_i).  The async scheduler
+(``repro.fl.scheduler``) instead dispatches only to online clients —
+that asymmetry is exactly what the ``async-engine`` bench measures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+# seed-stream salts: keep the speed and trace streams disjoint from each
+# other (and trivially from the federation's participation RandomState,
+# which is seeded with the bare integer seed)
+_SPEED_SALT = 0xA11C_0DE
+_TRACE_SALT = 0x0F_F0
+
+
+@dataclass(frozen=True)
+class AvailabilityConfig:
+    """Client heterogeneity knobs (all times in simulated seconds).
+
+    The defaults are the *degenerate* configuration: fixed uniform speeds,
+    always-online clients — the setting under which ``AsyncFederation``
+    must reproduce the synchronous history bitwise (DESIGN.md §10).
+    """
+
+    speed: str = "fixed"  # "fixed" | "lognormal" per-client multipliers
+    mean_duration: float = 1.0  # median client round duration
+    sigma: float = 1.0  # lognormal sigma of the speed multipliers
+    availability: float = 1.0  # steady-state online fraction; 1.0 = always on
+    mean_on: float = 10.0  # mean online-stretch length (exponential)
+
+
+class ClientAvailability:
+    """Per-client speeds + on/off traces, deterministic per (cfg, K, seed)."""
+
+    def __init__(self, cfg: AvailabilityConfig, n_clients: int, seed: int):
+        if not 0.0 < cfg.availability <= 1.0:
+            raise ValueError(f"availability must be in (0, 1], got {cfg.availability}")
+        if cfg.mean_duration <= 0.0 or cfg.mean_on <= 0.0:
+            raise ValueError("mean_duration and mean_on must be positive")
+        self.cfg = cfg
+        self.n = n_clients
+        self.seed = seed
+        if cfg.speed == "fixed":
+            mult = np.ones(n_clients)
+        elif cfg.speed == "lognormal":
+            rng = np.random.RandomState([seed, _SPEED_SALT])
+            mult = rng.lognormal(mean=0.0, sigma=cfg.sigma, size=n_clients)
+        else:
+            raise ValueError(
+                f"unknown speed model {cfg.speed!r}; choose 'fixed' or 'lognormal'"
+            )
+        # persistent per-client round duration (median = mean_duration)
+        self.durations = cfg.mean_duration * mult
+        self._always_on = cfg.availability >= 1.0
+        # per-client lazily extended traces: (rng, start_on, boundaries)
+        # where boundaries[j] is the cumulative time of the j-th on/off flip
+        self._traces: dict = {}
+
+    # -- durations ---------------------------------------------------------
+
+    def duration(self, client: int) -> float:
+        """Simulated duration of one dispatched client round."""
+        return float(self.durations[client])
+
+    # -- on/off traces -----------------------------------------------------
+
+    def _trace(self, client: int, until: float):
+        """Trace for ``client`` covering at least ``until`` sim-seconds.
+
+        Alternating exponential on/off periods: mean_on online, and
+        mean_off = mean_on * (1 - p) / p offline, which gives steady-state
+        online fraction p.  Initial state is online with probability p.
+        Extension only appends — the trace is a pure function of the seed.
+        """
+        tr = self._traces.get(client)
+        if tr is None:
+            rng = np.random.RandomState([self.seed, _TRACE_SALT, client])
+            start_on = bool(rng.random_sample() < self.cfg.availability)
+            tr = {"rng": rng, "start_on": start_on, "bounds": [0.0]}
+            self._traces[client] = tr
+        p = self.cfg.availability
+        mean_off = self.cfg.mean_on * (1.0 - p) / p
+        bounds = tr["bounds"]
+        while bounds[-1] <= until:
+            # state during the period being appended alternates from start_on
+            on_now = tr["start_on"] ^ (len(bounds) % 2 == 0)
+            mean = self.cfg.mean_on if on_now else mean_off
+            bounds.append(bounds[-1] + float(tr["rng"].exponential(mean)))
+        return tr
+
+    def is_online(self, client: int, t: float) -> bool:
+        """Online at time t?  Periods are half-open [start, end)."""
+        if self._always_on:
+            return True
+        tr = self._trace(client, t)
+        j = int(np.searchsorted(tr["bounds"], t, side="right")) - 1
+        return tr["start_on"] ^ (j % 2 == 1)
+
+    def next_online(self, client: int, t: float) -> float:
+        """Earliest time >= t at which ``client`` is online."""
+        if self._always_on:
+            return t
+        if self.is_online(client, t):
+            return t
+        tr = self._trace(client, t)
+        bounds = tr["bounds"]
+        # bounds[-1] > t after _trace, so this index always exists: it is
+        # the end of the offline period containing t == the next on-start
+        # (periods strictly alternate)
+        j = int(np.searchsorted(bounds, t, side="right"))
+        return float(bounds[j])
+
+    # -- bulk-synchronous cost model --------------------------------------
+
+    def sync_round_duration(self, client_ids, t: float) -> float:
+        """Simulated wall-clock of one bulk-synchronous round from time t.
+
+        The synchronous server samples availability-obliviously and waits
+        for the full cohort: the round ends when the LAST sampled client
+        has come online and finished, so the cost is
+        max_i(next_online_i(t) + duration_i) - t.
+        """
+        ends = [self.next_online(int(i), t) + self.duration(int(i))
+                for i in np.asarray(client_ids).tolist()]
+        return max(ends) - t

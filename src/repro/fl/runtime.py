@@ -5,10 +5,16 @@ pytrees (leading K axis); each round the K' participating clients are
 gathered, a ``FederationEngine`` backend (``repro.fl.engine``) runs the
 method's ``client_round`` across them — ``jax.vmap`` on one device, or
 ``shard_map`` over a client-axis device mesh — uploads are aggregated by
-the method's ``server_update``, and the states are scattered back.  The
-whole round (client phase + aggregation + evaluation) is one jitted
-function - client_ids are a traced argument so the round function compiles
-exactly once per federation.
+the method's ``server_update``, and the states are scattered back.
+
+The round is executed as four jitted *phase programs* (gather+client,
+eval, aggregate, scatter) built by ``RoundPrograms`` and shared between
+the synchronous driver here and the asynchronous driver
+(``repro.fl.async_``): because both drivers run literally the same
+compiled programs on the same operands, the async subsystem's
+sync-degenerate guarantee (DESIGN.md §10) is structural — bitwise, not
+"up to XLA fusion".  Each phase program compiles once per cohort size, so
+recompilation under the async scheduler's micro-cohorts stays bounded.
 
 This is numerically identical to the paper's sequential-client loop (same
 initialization, same per-client sampling; verified in
@@ -32,6 +38,13 @@ from repro.core.baselines import FLMethod
 from repro.data.federated import FederatedData
 from repro.fl.engine import make_engine
 from repro.kernels.dispatch import resolve_update_impl
+from repro.utils.checkpoint import (
+    load_checkpoint,
+    read_manifest,
+    restore_rng_state,
+    rng_state_tree,
+    save_checkpoint,
+)
 
 Pytree = Any
 
@@ -95,6 +108,124 @@ class FLRunConfig:
     # method at federation construction and errors on methods without the
     # knob — a run-level impl request must never be silently ignored.
     update_impl: str = ""
+    # Checkpointing (repro.utils.checkpoint): save the full driver state
+    # (stacked client states, broadcast, host RNG state, history, and — for
+    # the async driver — scheduler/buffer state) every ``ckpt_every``
+    # applied server updates into ``ckpt_dir``.  0/"" disables.  Restart
+    # with Federation.restore / AsyncFederation.restore (CLI: --resume on
+    # examples/train_federated.py); a restored run reproduces the
+    # uninterrupted history bitwise (tests/test_checkpoint_resume.py).
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+    # Async subsystem (DESIGN.md §10): nested repro.fl.async_.AsyncConfig
+    # consumed by AsyncFederation (ignored by the synchronous driver).
+    # Typed Any to keep runtime free of an async_ import cycle.
+    async_cfg: Any = None
+
+
+class RoundPrograms:
+    """Jitted per-phase round programs, cached per cohort size.
+
+    One FL round factors into four phases — (1) gather + client phase,
+    (2) per-client eval, (3) server aggregation, (4) scatter-back — and
+    both federation drivers (synchronous ``Federation`` here, buffered-
+    asynchronous ``AsyncFederation`` in ``repro.fl.async_``) execute the
+    SAME compiled programs from this cache.  That sharing is the
+    correctness anchor of the async subsystem: in its degenerate
+    configuration the async driver feeds identical operands to identical
+    programs, so its history matches the synchronous one bitwise
+    (DESIGN.md §10, tests/test_async_federation.py).
+
+    Engines (and therefore the client/eval programs, whose mesh is baked
+    in at trace time) are cached per cohort size; the aggregate/scatter
+    programs are single ``jax.jit`` objects that retrace per operand
+    shape.  The async scheduler dispatches in grouped cohorts, so the
+    cache stays bounded by the distinct cohort sizes actually seen.
+
+    ``strict_shards=False`` (the async driver) falls back to the largest
+    dividing shard count when an explicitly requested split does not
+    divide a micro-cohort; the synchronous driver keeps the strict §3
+    validation (a requested split must never be silently changed).
+    """
+
+    def __init__(self, method, loss_fn, acc_fn, backend: str, shards: int = 0,
+                 strict_shards: bool = True):
+        self.method = method
+        self.loss_fn = loss_fn
+        self.acc_fn = acc_fn
+        self.backend = backend
+        self.shards = shards
+        self.strict_shards = strict_shards
+        self._engines: Dict[int, Any] = {}
+        self._client: Dict[int, Any] = {}
+        self._eval: Dict[int, Any] = {}
+        method_ = method
+
+        def _aggregate(broadcast, uploads):
+            return method_.server_update(broadcast, uploads)
+
+        def _aggregate_stale(broadcast, uploads, staleness):
+            return method_.server_update_stale(broadcast, uploads, staleness)
+
+        def _scatter(full, client_ids, new):
+            return jax.tree.map(
+                lambda f, n: f.at[client_ids].set(n), full, new
+            )
+
+        self.aggregate = jax.jit(_aggregate)
+        self.aggregate_stale = jax.jit(_aggregate_stale)
+        self.scatter = jax.jit(_scatter)
+
+    def engine(self, cohort: int):
+        eng = self._engines.get(cohort)
+        if eng is None:
+            shards = self.shards
+            if (shards and self.backend == "shard_map" and cohort % shards
+                    and not self.strict_shards):
+                shards = 0  # micro-cohort fallback: auto (largest divisor)
+            eng = make_engine(self.backend, cohort, shards)
+            self._engines[cohort] = eng
+        return eng
+
+    def client_fn(self, cohort: int):
+        """(client_states, broadcast, client_ids (c,), batches) ->
+        (new_states, uploads, metrics), gather fused into the program."""
+        fn = self._client.get(cohort)
+        if fn is None:
+            engine = self.engine(cohort)
+            method, loss_fn = self.method, self.loss_fn
+
+            def one_client(state, broadcast, batch_seq):
+                return method.client_round(loss_fn, state, broadcast, batch_seq)
+
+            def run(client_states, broadcast, client_ids, batches):
+                gathered = jax.tree.map(lambda x: x[client_ids], client_states)
+                return engine.client_phase(one_client, gathered, broadcast, batches)
+
+            fn = jax.jit(run)
+            self._client[cohort] = fn
+        return fn
+
+    def eval_fn(self, cohort: int):
+        """(states (c-stacked), broadcast, test_sets) -> accuracies (c,)."""
+        fn = self._eval.get(cohort)
+        if fn is None:
+            engine = self.engine(cohort)
+            method, acc_fn = self.method, self.acc_fn
+
+            def one_eval(state, broadcast, test):
+                params = method.eval_params(state, broadcast)
+                return acc_fn(params, test)
+
+            def run(states, broadcast, test_sets):
+                return engine.eval_phase(one_eval, states, broadcast, test_sets)
+
+            fn = jax.jit(run)
+            self._eval[cohort] = fn
+        return fn
+
+
+_HISTORY_KEYS = ("loss", "acc", "round_time", "sim_time")
 
 
 class Federation:
@@ -103,6 +234,20 @@ class Federation:
     Sampling (client participation + local SGD batches) is host-side numpy
     seeded by ``run_cfg.seed`` and therefore identical across backends;
     backend choice only changes where the traced client phase executes.
+
+    ``AsyncFederation`` (``repro.fl.async_``) subclasses this driver,
+    reusing the construction, the shared phase programs, and the
+    checkpoint core; ``_strict_shards`` is the only knob it flips (its
+    micro-cohorts may not divide an explicitly requested shard count).
+
+    ``availability`` (optional, ``repro.fl.availability``) attaches the
+    client-heterogeneity model to the *simulated clock* only: the
+    bulk-synchronous server samples obliviously and then waits for every
+    sampled client to come online and finish, so each round advances
+    ``sim_time`` by max_i(wait_i + duration_i).  Without a model every
+    round costs one simulated unit.  The model never touches numerics or
+    the participation RNG (it draws from its own seeded streams), so
+    attaching it changes nothing but the ``sim_time`` history column.
     """
 
     def __init__(
@@ -113,7 +258,14 @@ class Federation:
         init_params: Pytree,
         data: FederatedData,
         run_cfg: FLRunConfig,
+        availability=None,
     ):
+        self._init_core(method, loss_fn, acc_fn, init_params, data, run_cfg)
+        self.availability = availability
+
+    _strict_shards = True
+
+    def _init_core(self, method, loss_fn, acc_fn, init_params, data, run_cfg):
         validate_method(method)
         if run_cfg.update_impl:
             method = override_update_impl(method, run_cfg.update_impl)
@@ -128,7 +280,11 @@ class Federation:
         assert data.n_clients == k, (data.n_clients, k)
         self.kprime = max(1, int(round(run_cfg.participation * k)))
         self.T = run_cfg.local_iters or data.local_iters(run_cfg.batch)
-        self.engine = make_engine(run_cfg.backend, self.kprime, run_cfg.shards)
+        self.programs = RoundPrograms(method, loss_fn, acc_fn,
+                                      run_cfg.backend, run_cfg.shards,
+                                      strict_shards=self._strict_shards)
+        # built eagerly: validates backend/shards at construction (§3)
+        self.engine = self.programs.engine(self.kprime)
 
         # same init for every client (paper: "same initialization for all
         # methods"); states stacked on a leading K axis
@@ -138,72 +294,131 @@ class Federation:
         )
         self.broadcast = method.init_server(init_params)
         self.best_acc = np.zeros(k, np.float64)  # per-client best (Table II)
-
-        self._round_fn = jax.jit(self._make_round_fn())
-
-    def _make_round_fn(self):
-        method, loss_fn, acc_fn = self.method, self.loss_fn, self.acc_fn
-        engine = self.engine
-
-        def one_client(state, broadcast, batch_seq):
-            return method.client_round(loss_fn, state, broadcast, batch_seq)
-
-        def one_eval(state, broadcast, test):
-            params = method.eval_params(state, broadcast)
-            return acc_fn(params, test)
-
-        def round_fn(client_states, broadcast, client_ids, batches, test_sets):
-            gathered = jax.tree.map(lambda x: x[client_ids], client_states)
-
-            new_states, uploads, metrics = engine.client_phase(
-                one_client, gathered, broadcast, batches
-            )
-
-            # server aggregation over the (possibly cross-shard) client axis
-            new_broadcast = method.server_update(broadcast, uploads)
-
-            # personalized eval against the pre-update broadcast (the model a
-            # client would deploy this round)
-            accs = engine.eval_phase(one_eval, new_states, broadcast, test_sets)
-
-            client_states = jax.tree.map(
-                lambda full, new: full.at[client_ids].set(new), client_states, new_states
-            )
-            return client_states, new_broadcast, metrics, accs
-
-        return round_fn
+        # explicit participation mask: ``best_acc > 0`` is NOT a
+        # participation proxy — a participating client's best accuracy can
+        # legitimately be 0.0 and must still count in mean_best_acc
+        self.participated = np.zeros(k, bool)
+        self.sim_time = 0.0
+        self._round = 0
+        self._history = {key: [] for key in _HISTORY_KEYS}
 
     def run_round(self):
         ids = self.rng.choice(self.cfg.n_clients, self.kprime, replace=False)
         batches = self.data.sample_round_batches(self.rng, ids, self.T, self.cfg.batch)
         tests = self.data.client_test_set(ids)
-        self.client_states, self.broadcast, metrics, accs = self._round_fn(
-            self.client_states, self.broadcast, jnp.asarray(ids), batches, tests
+        jids = jnp.asarray(ids)
+        new_states, uploads, metrics = self.programs.client_fn(self.kprime)(
+            self.client_states, self.broadcast, jids, batches
         )
+        # personalized eval against the pre-update broadcast (the model a
+        # client would deploy this round)
+        accs = self.programs.eval_fn(self.kprime)(new_states, self.broadcast, tests)
+        self.broadcast = self.programs.aggregate(self.broadcast, uploads)
+        self.client_states = self.programs.scatter(self.client_states, jids, new_states)
+
         accs = np.asarray(accs, np.float64)
         self.best_acc[ids] = np.maximum(self.best_acc[ids], accs)
+        self.participated[ids] = True
+        if self.availability is not None:
+            self.sim_time += self.availability.sync_round_duration(ids, self.sim_time)
+        else:
+            self.sim_time += 1.0
         return {
             "loss": float(np.mean(np.asarray(metrics["loss"]))),
             "acc": float(np.mean(accs)),
         }
 
     def run(self, verbose: bool = False):
-        history = {"loss": [], "acc": [], "round_time": []}
-        for t in range(self.cfg.rounds):
+        while self._round < self.cfg.rounds:
+            t = self._round
             t0 = time.perf_counter()
             m = self.run_round()
             dt = time.perf_counter() - t0
-            history["loss"].append(m["loss"])
-            history["acc"].append(m["acc"])
-            history["round_time"].append(dt)
+            self._history["loss"].append(m["loss"])
+            self._history["acc"].append(m["acc"])
+            self._history["round_time"].append(dt)
+            self._history["sim_time"].append(self.sim_time)
+            self._round += 1
             if verbose and (t % 10 == 0 or t == self.cfg.rounds - 1):
                 print(
                     f"[{self.method.name}/{self.engine.name}] round {t:4d} "
                     f"loss={m['loss']:.4f} acc={m['acc']:.4f} ({dt:.2f}s)"
                 )
-        history["mean_best_acc"] = float(np.mean(self.best_acc[self.best_acc > 0]))
+            if (self.cfg.ckpt_every and self.cfg.ckpt_dir
+                    and self._round % self.cfg.ckpt_every == 0):
+                self.save(self.cfg.ckpt_dir)
+        history = self._finalize_history()
         history["engine"] = self.engine.describe()
         return history
+
+    def _finalize_history(self):
+        """History lists + mean_best_acc over the explicit participation
+        mask (shared by both drivers — the ``best_acc > 0`` proxy it
+        replaces dropped clients whose best accuracy is legitimately 0.0)."""
+        history = {key: list(v) for key, v in self._history.items()}
+        history["mean_best_acc"] = (
+            float(np.mean(self.best_acc[self.participated]))
+            if self.participated.any() else 0.0
+        )
+        return history
+
+    # -- checkpoint / resume ----------------------------------------------
+
+    def _ckpt_tree(self):
+        return {
+            "client_states": self.client_states,
+            "broadcast": self.broadcast,
+            "best_acc": self.best_acc,
+            "participated": self.participated,
+            "rng": rng_state_tree(self.rng),
+            "history": {key: np.asarray(v, np.float64)
+                        for key, v in self._history.items()},
+        }
+
+    def save(self, ckpt_dir) -> str:
+        """Checkpoint the full driver state after ``self._round`` rounds."""
+        return save_checkpoint(
+            ckpt_dir, self._round, self._ckpt_tree(),
+            extra={"round": self._round, "sim_time": self.sim_time,
+                   "driver": "sync"},
+        )
+
+    def restore(self, ckpt_dir=None, step=None) -> int:
+        """Restore state saved by ``save``; returns the round to resume at.
+
+        Must be called on a freshly constructed, identically configured
+        federation; the resumed run reproduces the uninterrupted loss/acc
+        history bitwise (tests/test_checkpoint_resume.py).
+        """
+        ckpt_dir = ckpt_dir or self.cfg.ckpt_dir
+        driver = read_manifest(ckpt_dir, step)["extra"].get("driver")
+        if driver != "sync":
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} was written by the {driver!r} "
+                "driver, not 'sync'; resume it with the matching driver "
+                "(e.g. train_federated.py --mode async)"
+            )
+        tree, extra = load_checkpoint(ckpt_dir, self._ckpt_template(), step=step)
+        self._restore_core(tree, extra)
+        return self._round
+
+    def _restore_core(self, tree, extra):
+        self.client_states = tree["client_states"]
+        self.broadcast = tree["broadcast"]
+        self.best_acc = np.asarray(tree["best_acc"], np.float64)
+        self.participated = np.asarray(tree["participated"], bool)
+        restore_rng_state(self.rng, tree["rng"])
+        self._history = {key: [float(x) for x in np.asarray(v)]
+                         for key, v in tree["history"].items()}
+        self._round = int(extra["round"])
+        self.sim_time = float(extra["sim_time"])
+
+    def _ckpt_template(self):
+        tmpl = self._ckpt_tree()
+        # history arrays vary in length across checkpoints; only the key
+        # names matter for restore (repro.utils.checkpoint matches names)
+        tmpl["history"] = {key: np.zeros(0, np.float64) for key in self._history}
+        return tmpl
 
 
 def masked_accuracy(apply_fn):

@@ -1,0 +1,139 @@
+"""Availability-aware discrete-event round scheduler (DESIGN.md §10).
+
+Host-side bookkeeping for the asynchronous federation driver
+(``repro.fl.async_``): *when* clients run, never *what* they compute.
+Three responsibilities:
+
+- **Grouped dispatch.**  ``dispatch_group`` fills the free concurrency
+  slots from the currently online, idle clients with ONE
+  ``rng.choice(candidates, m, replace=False)`` draw on the federation's
+  participation RandomState.  Grouping matters twice over: clients
+  dispatched together share the same broadcast version, so the traced
+  client phase runs them through the existing ``FederationEngine``
+  backends as one stacked micro-cohort (one jitted SPMD launch, one
+  batched §9 kernel call — never K' single-client launches); and in the
+  degenerate configuration (everyone online, uniform speeds, concurrency
+  = K') the candidate set is exactly ``arange(K)``, making the draw — and
+  therefore the whole downstream RNG stream — bitwise identical to the
+  synchronous driver's ``rng.choice(K, K', replace=False)``.
+- **Completion events.**  A min-heap of ``(completion_time, seq, client)``
+  triples; ``seq`` is the global dispatch order, so simultaneous
+  completions pop in dispatch order — which is what keeps the degenerate
+  configuration's upload stacking order identical to the synchronous
+  engine output.  ``pop_completions`` pops the *micro-cohort* of every
+  event sharing the minimal completion time, so deliveries (state
+  scatter + eval) batch through the engines too.
+- **Wakeups.**  When slots are free but every idle client is offline,
+  ``next_dispatch_time`` gives the earliest on-transition to advance the
+  clock to.
+
+The scheduler is checkpointable: ``state()``/``restore_state`` round-trip
+the heap and the dispatch counter through plain numpy arrays
+(repro.utils.checkpoint), and the availability model itself needs no
+state (pure function of the seed — see repro.fl.availability).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.fl.availability import ClientAvailability
+
+
+class RoundScheduler:
+    """Dispatch/completion bookkeeping over a ``ClientAvailability`` model."""
+
+    def __init__(self, availability: ClientAvailability, concurrency: int):
+        if concurrency < 1:
+            raise ValueError(f"concurrency must be >= 1, got {concurrency}")
+        self.avail = availability
+        self.concurrency = concurrency
+        self._heap: List[Tuple[float, int, int]] = []
+        self._seq = 0
+        self.inflight: set = set()
+
+    # -- dispatch ----------------------------------------------------------
+
+    def free_slots(self) -> int:
+        return self.concurrency - len(self.inflight)
+
+    def candidates(self, t: float) -> np.ndarray:
+        """Online, idle client ids at time t (sorted — ascending id order,
+        matching the synchronous sampler's arange population)."""
+        return np.asarray(
+            [i for i in range(self.avail.n)
+             if i not in self.inflight and self.avail.is_online(i, t)],
+            np.int64,
+        )
+
+    def dispatch_group(self, t: float, rng: np.random.RandomState) -> np.ndarray:
+        """Sample and dispatch a micro-cohort at time t; returns its ids.
+
+        One grouped ``rng.choice`` per event (never per client) on the
+        federation's shared participation RandomState — see module
+        docstring for why.  Returns an empty array when no slots are free
+        or every idle client is offline.
+        """
+        want = self.free_slots()
+        if want <= 0:
+            return np.empty(0, np.int64)
+        cands = self.candidates(t)
+        m = min(want, len(cands))
+        if m == 0:
+            return np.empty(0, np.int64)
+        ids = rng.choice(cands, m, replace=False)
+        for i in ids.tolist():
+            heapq.heappush(self._heap, (t + self.avail.duration(i), self._seq, i))
+            self._seq += 1
+            self.inflight.add(i)
+        return ids
+
+    # -- completions -------------------------------------------------------
+
+    def next_completion_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def pop_completions(self) -> Tuple[float, List[int]]:
+        """Pop the micro-cohort of ALL events at the minimal completion
+        time, in dispatch (seq) order; marks them idle again."""
+        if not self._heap:
+            raise RuntimeError("pop_completions on an empty event heap")
+        t = self._heap[0][0]
+        ids: List[int] = []
+        while self._heap and self._heap[0][0] == t:
+            _, _, i = heapq.heappop(self._heap)
+            ids.append(i)
+            self.inflight.discard(i)
+        return t, ids
+
+    def next_dispatch_time(self, t: float) -> Optional[float]:
+        """Earliest time > t when an idle client comes online (None when
+        every client is in flight)."""
+        idle = [i for i in range(self.avail.n) if i not in self.inflight]
+        if not idle:
+            return None
+        return min(self.avail.next_online(i, t) for i in idle)
+
+    # -- checkpointing -----------------------------------------------------
+
+    def state(self) -> dict:
+        """Heap + counter as arrays (npz-exact; repro.utils.checkpoint)."""
+        ev = sorted(self._heap)
+        return {
+            "times": np.asarray([e[0] for e in ev], np.float64),
+            "seqs": np.asarray([e[1] for e in ev], np.int64),
+            "ids": np.asarray([e[2] for e in ev], np.int64),
+            "seq_counter": np.int64(self._seq),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        times = np.asarray(state["times"], np.float64)
+        seqs = np.asarray(state["seqs"], np.int64)
+        ids = np.asarray(state["ids"], np.int64)
+        self._heap = [(float(t), int(s), int(i))
+                      for t, s, i in zip(times, seqs, ids)]
+        heapq.heapify(self._heap)
+        self._seq = int(state["seq_counter"])
+        self.inflight = set(int(i) for i in ids)

@@ -47,6 +47,51 @@ def save_checkpoint(ckpt_dir, step: int, tree: Any, extra: Optional[dict] = None
     return str(d)
 
 
+def read_manifest(ckpt_dir, step: Optional[int] = None) -> dict:
+    """Peek at a checkpoint's manifest without loading arrays.
+
+    The federation drivers need this before ``load_checkpoint``: the async
+    driver's checkpoint tree has variable-count subtrees (in-flight work,
+    aggregation buffer) whose presence is recorded in ``extra``, so the
+    restore template must be built after reading the counts.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    return json.loads((d / "manifest.json").read_text())
+
+
+def rng_state_tree(rng: "np.random.RandomState") -> dict:
+    """Snapshot a host RandomState as a checkpointable array pytree.
+
+    The MT19937 state tuple from ``rng.get_state()`` becomes plain numpy
+    arrays (npz round-trips them exactly), so a restored federation resumes
+    the participation/batch sampling stream bit-for-bit.
+    """
+    kind, keys, pos, has_gauss, cached = rng.get_state()
+    if kind != "MT19937":
+        raise ValueError(f"unsupported bit generator {kind!r} (expected MT19937)")
+    return {
+        "keys": np.asarray(keys, np.uint32),
+        "pos": np.asarray(pos, np.int64),
+        "has_gauss": np.asarray(has_gauss, np.int64),
+        "cached_gaussian": np.asarray(cached, np.float64),
+    }
+
+
+def restore_rng_state(rng: "np.random.RandomState", tree: dict) -> None:
+    """Inverse of ``rng_state_tree`` (accepts jnp or np leaves)."""
+    rng.set_state((
+        "MT19937",
+        np.asarray(tree["keys"], np.uint32),
+        int(tree["pos"]),
+        int(tree["has_gauss"]),
+        float(tree["cached_gaussian"]),
+    ))
+
+
 def latest_step(ckpt_dir) -> Optional[int]:
     d = Path(ckpt_dir)
     if not d.exists():
@@ -70,10 +115,18 @@ def load_checkpoint(ckpt_dir, template: Any, step: Optional[int] = None):
     assert [n for n, _ in named_t] == manifest["names"], (
         "checkpoint/template structure mismatch"
     )
-    leaves = [
-        jax.numpy.asarray(by_name[n]).astype(l.dtype) if hasattr(l, "dtype")
-        else by_name[n]
-        for n, l in named_t
-    ]
+    leaves = []
+    for n, l in named_t:
+        arr = by_name[n]
+        if isinstance(l, (np.ndarray, np.generic)):
+            # host-side state (RNG words, histories, masks, scheduler
+            # arrays): stay in numpy — round-tripping through jnp would
+            # truncate float64/int64 on x64-disabled jax and return
+            # read-only buffers
+            leaves.append(np.array(arr, dtype=l.dtype))
+        elif hasattr(l, "dtype"):
+            leaves.append(jax.numpy.asarray(arr).astype(l.dtype))
+        else:
+            leaves.append(arr)
     flat, treedef = jax.tree_util.tree_flatten(template)
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["extra"]

@@ -1,0 +1,363 @@
+"""Async federation subsystem tests (DESIGN.md §10).
+
+The correctness anchor: the degenerate async configuration — every client
+always online at uniform speed, concurrency = buffer_size = K' — must
+reproduce the synchronous ``Federation`` loss/acc history BITWISE on the
+same seed, under both engine backends (vmap in-process; a forced 4-device
+shard_map mesh in a subprocess, mirroring tests/test_engine.py).  Plus:
+the tau=0 identity of the method-level staleness hook, heterogeneous
+scheduling behavior, determinism of the availability model, and §9
+kernel-dispatch parity under the async driver.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.resnet_cifar import SMALL_CNN
+from repro.core.baselines import METHODS, staleness_weights
+from repro.core import pfedsop as pf
+from repro.data import FederatedData, dirichlet_partition, make_class_conditional_images
+from repro.fl import (
+    AsyncConfig,
+    AsyncFederation,
+    AvailabilityConfig,
+    ClientAvailability,
+    Federation,
+    FLRunConfig,
+    RoundScheduler,
+)
+from repro.fl.runtime import masked_accuracy
+from repro.models import cnn
+
+CFG = SMALL_CNN
+REPO = Path(__file__).resolve().parents[1]
+
+HETERO = AvailabilityConfig(speed="lognormal", sigma=1.0,
+                            availability=0.3, mean_on=4.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    images, labels = make_class_conditional_images(800, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+    return data, params, loss, acc
+
+
+def _run_cfg(rounds=3, backend="vmap", update_impl=""):
+    return FLRunConfig(n_clients=8, participation=0.5, rounds=rounds,
+                       batch=8, local_iters=2, seed=1, backend=backend,
+                       update_impl=update_impl)
+
+
+def _sync(setup, **kw):
+    data, params, loss, acc = setup
+    return Federation(METHODS[kw.pop("method", "pfedsop")](), loss, acc,
+                      params, data, _run_cfg(**kw)).run()
+
+
+def _async(setup, async_cfg=None, **kw):
+    data, params, loss, acc = setup
+    return AsyncFederation(METHODS[kw.pop("method", "pfedsop")](), loss, acc,
+                           params, data, _run_cfg(**kw), async_cfg).run()
+
+
+# ---------------------------------------------------------------------------
+# Sync-degenerate bitwise parity (the subsystem's acceptance anchor)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["pfedsop", "fedavg"])
+def test_degenerate_async_matches_sync_bitwise(setup, method):
+    """Always-on clients, uniform speed, buffer_size = K' == lockstep sync.
+
+    Exact ``==`` on purpose (cf. the single-device backend-parity canary
+    in tests/test_engine.py): the async driver feeds identical operands
+    to the SAME jitted phase programs, so any drift means the shared
+    RoundPrograms seam broke — look at it, don't hide it in a tolerance.
+    """
+    h_sync = _sync(setup, method=method)
+    h_async = _async(setup, method=method)  # AsyncConfig() defaults = degenerate
+    assert h_sync["loss"] == h_async["loss"]
+    assert h_sync["acc"] == h_async["acc"]
+    assert h_sync["sim_time"] == h_async["sim_time"]
+    assert h_async["staleness"] == [0.0] * len(h_async["loss"])
+    assert h_async["engine"]["mode"] == "async"
+    assert h_sync["mean_best_acc"] == h_async["mean_best_acc"]
+
+
+def test_degenerate_async_matches_sync_kernel_impl(setup):
+    """The degenerate equivalence also holds on the §9 kernel path."""
+    h_sync = _sync(setup, update_impl="kernel_interpret")
+    h_async = _async(setup, update_impl="kernel_interpret")
+    assert h_sync["loss"] == h_async["loss"]
+    assert h_sync["acc"] == h_async["acc"]
+
+
+_MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import jax, numpy as np
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.configs.resnet_cifar import SMALL_CNN as CFG
+    from repro.core.baselines import METHODS
+    from repro.data import (FederatedData, dirichlet_partition,
+                            make_class_conditional_images)
+    from repro.fl import AsyncFederation, Federation, FLRunConfig
+    from repro.fl.runtime import masked_accuracy
+    from repro.models import cnn
+
+    images, labels = make_class_conditional_images(600, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+
+    cfg = FLRunConfig(n_clients=8, participation=0.5, rounds=2, batch=8,
+                      local_iters=2, seed=1, backend="shard_map")
+    h_sync = Federation(METHODS["pfedsop"](), loss, acc, params, data, cfg).run()
+    h_async = AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data,
+                              cfg).run()
+    assert h_sync["engine"]["shards"] == 4, h_sync["engine"]
+    assert h_async["engine"]["shards"] == 4, h_async["engine"]
+    assert h_sync["loss"] == h_async["loss"], (h_sync["loss"], h_async["loss"])
+    assert h_sync["acc"] == h_async["acc"], (h_sync["acc"], h_async["acc"])
+    print("ASYNC_MULTIDEV_PARITY_OK")
+    """
+)
+
+
+def test_degenerate_parity_shard_map_multi_device():
+    """Degenerate async == sync bitwise on a real 4-shard mesh.
+
+    Subprocess: the XLA device count must be set before jax initialises,
+    and the rest of the suite needs the single real CPU device.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", _MULTIDEV_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "ASYNC_MULTIDEV_PARITY_OK" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# Staleness hook (FLMethod contract, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def _fake_uploads(params, n=3):
+    return jax.tree.map(
+        lambda x: jnp.stack([(i + 1.0) * x for i in range(n)]), params
+    )
+
+
+@pytest.mark.parametrize("name", ["fedavg", "fedprox", "fedrep", "local",
+                                  "scaffold", "fedexp"])
+def test_server_update_stale_tau_zero_is_identity(setup, name):
+    """The default staleness hook with an all-fresh buffer is bitwise ==
+    server_update (the identity the degenerate guarantee rests on)."""
+    data, params, loss, acc = setup
+    m = METHODS[name]() if name != "fedrep" else METHODS[name](
+        head_predicate=lambda p: "fc_" in p)
+    broadcast = m.init_server(params)
+    ups = _fake_uploads(params)
+    if name == "scaffold":
+        ups = {"y": ups, "dc": jax.tree.map(lambda u: 0.1 * u, ups)}
+    out_plain = m.server_update(broadcast, ups)
+    out_stale = m.server_update_stale(broadcast, ups, jnp.zeros(3, jnp.int32))
+    for a, b in zip(jax.tree.leaves(out_plain), jax.tree.leaves(out_stale)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pfedsop_stale_tau_zero_is_identity(setup):
+    data, params, loss, acc = setup
+    m = METHODS["pfedsop"]()
+    broadcast = {"delta": jax.tree.map(lambda x: 0.1 * x, params),
+                 "has_delta": jnp.asarray(True)}
+    ups = _fake_uploads(params)
+    out_plain = m.server_update(broadcast, ups)
+    out_stale = m.server_update_stale(broadcast, ups, jnp.zeros(3, jnp.int32))
+    for a, b in zip(jax.tree.leaves(out_plain), jax.tree.leaves(out_stale)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pfedsop_stale_blend_downweights_conflicting(setup):
+    """A stale upload anti-aligned with the global delta is pulled toward
+    it harder than an aligned one (the down-BLEND semantics)."""
+    data, params, loss, acc = setup
+    g = jax.tree.map(lambda x: jnp.ones_like(x), params)
+    aligned = jax.tree.map(lambda x: 2.0 * x, g)
+    conflicting = jax.tree.map(lambda x: -2.0 * x, g)
+    s = pf.staleness_discount(jnp.asarray([4]), 0.5)[0]  # stale: s < 1
+    bl_a = pf.stale_blend(aligned, g, s, lam=1.0)
+    bl_c = pf.stale_blend(conflicting, g, s, lam=1.0)
+
+    def dist(a, b):
+        return float(sum(jnp.sum(jnp.abs(x - y))
+                         for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))))
+
+    # the conflicting delta moves (much) more than the aligned one
+    assert dist(bl_c, conflicting) > dist(bl_a, aligned)
+    # fresh upload passes through bit-exactly regardless of angle
+    fresh = pf.stale_blend(conflicting, g, jnp.float32(1.0), lam=1.0)
+    for a, b in zip(jax.tree.leaves(fresh), jax.tree.leaves(conflicting)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_staleness_weights_mean_one():
+    tau = jnp.asarray([0, 3, 7, 1], jnp.int32)
+    w = staleness_weights(tau, 0.5)
+    np.testing.assert_allclose(float(jnp.mean(w)), 1.0, rtol=1e-6)
+    assert float(w[0]) > float(w[1]) > float(w[2])  # fresher -> heavier
+    np.testing.assert_array_equal(
+        np.asarray(staleness_weights(jnp.zeros(5, jnp.int32), 0.5)),
+        np.ones(5, np.float32))
+
+
+def test_validate_method_requires_stale_hook(setup):
+    """server_update_stale is part of the FLMethod contract now."""
+    from repro.fl.runtime import validate_method
+
+    class NoStale:
+        name = "nostale"
+
+        def init_client(self, p): return {}
+        def init_server(self, p): return p
+        def client_round(self, *a): return None
+        def server_update(self, *a): return None
+        def eval_params(self, *a): return None
+
+    with pytest.raises(TypeError, match="server_update_stale"):
+        validate_method(NoStale())
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous scheduling
+# ---------------------------------------------------------------------------
+
+
+def test_heterogeneous_async_runs_and_is_stale(setup):
+    """Lognormal speeds + 30% availability: the event loop makes progress,
+    sim_time is monotone, and buffered aggregation actually sees staleness."""
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, availability=HETERO)
+    h = _async(setup, async_cfg=acfg, rounds=6)
+    assert len(h["loss"]) == 6
+    assert all(np.isfinite(v) for v in h["loss"])
+    assert all(0.0 <= a <= 1.0 for a in h["acc"])
+    sim = h["sim_time"]
+    assert all(sim[i] <= sim[i + 1] for i in range(len(sim) - 1))
+    assert min(h["staleness"]) >= 0.0
+    assert max(h["staleness"]) > 0.0  # heterogeneity => stale uploads
+    assert h["engine"]["buffer_size"] == 2
+
+
+def test_heterogeneous_async_deterministic(setup):
+    """Same seed -> identical histories (host RNG + seeded traces only)."""
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, availability=HETERO)
+    h1 = _async(setup, async_cfg=acfg, rounds=4)
+    h2 = _async(setup, async_cfg=acfg, rounds=4)
+    assert h1["loss"] == h2["loss"]
+    assert h1["sim_time"] == h2["sim_time"]
+    assert h1["staleness"] == h2["staleness"]
+
+
+def test_async_kernel_dispatch_parity_heterogeneous(setup):
+    """The staleness-weighted path still dispatches through the fused
+    pfedsop_update kernel (§9): reference vs kernel_interpret histories
+    agree within fp32 reduction-order tolerance, and the host-side
+    schedule (sim_time) is bit-identical (numerics never steer events)."""
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, availability=HETERO)
+    h_ref = _async(setup, async_cfg=acfg, rounds=4, update_impl="reference")
+    h_ker = _async(setup, async_cfg=acfg, rounds=4,
+                   update_impl="kernel_interpret")
+    np.testing.assert_allclose(h_ref["loss"], h_ker["loss"], rtol=1e-5,
+                               atol=1e-6)
+    assert h_ref["sim_time"] == h_ker["sim_time"]
+    assert h_ref["staleness"] == h_ker["staleness"]
+
+
+# ---------------------------------------------------------------------------
+# Availability model + scheduler units
+# ---------------------------------------------------------------------------
+
+
+def test_availability_deterministic_and_seed_sensitive():
+    a1 = ClientAvailability(HETERO, 16, seed=7)
+    a2 = ClientAvailability(HETERO, 16, seed=7)
+    a3 = ClientAvailability(HETERO, 16, seed=8)
+    np.testing.assert_array_equal(a1.durations, a2.durations)
+    assert not np.array_equal(a1.durations, a3.durations)
+    probe = [(c, t) for c in range(16) for t in (0.0, 3.7, 11.2)]
+    assert [a1.is_online(c, t) for c, t in probe] == \
+           [a2.is_online(c, t) for c, t in probe]
+    # query order must not matter (traces only ever extend forward)
+    b1 = ClientAvailability(HETERO, 16, seed=7)
+    assert [b1.is_online(c, t) for c, t in reversed(probe)] == \
+           [a1.is_online(c, t) for c, t in reversed(probe)]
+
+
+def test_availability_next_online_is_online():
+    av = ClientAvailability(HETERO, 4, seed=3)
+    for c in range(4):
+        for t in (0.0, 5.0, 17.3):
+            nt = av.next_online(c, t)
+            assert nt >= t
+            assert av.is_online(c, nt)
+
+
+def test_availability_degenerate_always_on():
+    av = ClientAvailability(AvailabilityConfig(), 4, seed=0)
+    assert av.is_online(2, 123.4) and av.next_online(2, 123.4) == 123.4
+    assert av.duration(2) == 1.0
+
+
+def test_availability_validates_config():
+    with pytest.raises(ValueError, match="availability"):
+        ClientAvailability(AvailabilityConfig(availability=0.0), 4, 0)
+    with pytest.raises(ValueError, match="speed"):
+        ClientAvailability(AvailabilityConfig(speed="constant"), 4, 0)
+
+
+def test_scheduler_degenerate_micro_cohort():
+    """Uniform speeds: one dispatch group completes as ONE micro-cohort,
+    in dispatch order, and the RNG draw matches the synchronous sampler."""
+    av = ClientAvailability(AvailabilityConfig(), 8, seed=0)
+    sched = RoundScheduler(av, concurrency=4)
+    rng = np.random.RandomState(1)
+    ids = sched.dispatch_group(0.0, rng)
+    np.testing.assert_array_equal(
+        ids, np.random.RandomState(1).choice(8, 4, replace=False))
+    assert sched.free_slots() == 0
+    assert len(sched.dispatch_group(0.0, rng)) == 0  # slots full
+    t, done = sched.pop_completions()
+    assert t == 1.0 and done == list(ids)
+    assert sched.free_slots() == 4
+
+
+def test_scheduler_excludes_inflight_and_offline():
+    av = ClientAvailability(HETERO, 8, seed=5)
+    sched = RoundScheduler(av, concurrency=8)
+    online = [i for i in range(8) if av.is_online(i, 0.0)]
+    ids = sched.dispatch_group(0.0, np.random.RandomState(0))
+    assert set(ids.tolist()) <= set(online)
+    # in-flight clients never re-dispatch until their completion delivers
+    again = sched.dispatch_group(0.0, np.random.RandomState(1))
+    assert not set(again.tolist()) & set(ids.tolist())

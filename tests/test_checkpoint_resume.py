@@ -1,0 +1,186 @@
+"""Checkpoint/resume tests for both federation drivers (DESIGN.md §10).
+
+The contract: run-to-2R produces the same loss/acc history as
+run-to-R -> save -> fresh driver -> restore -> run-to-2R, bitwise, for
+the synchronous AND the asynchronous driver (the async case checkpoints
+mid-simulation: scheduler heap, in-flight results and a partially filled
+aggregation buffer all round-trip).  Plus units for the RandomState
+snapshot helpers and the participated-mask fix to mean_best_acc.
+"""
+from dataclasses import replace
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.resnet_cifar import SMALL_CNN
+from repro.core.baselines import METHODS
+from repro.data import FederatedData, dirichlet_partition, make_class_conditional_images
+from repro.fl import (
+    AsyncConfig,
+    AsyncFederation,
+    AvailabilityConfig,
+    Federation,
+    FLRunConfig,
+)
+from repro.fl.runtime import masked_accuracy
+from repro.models import cnn
+from repro.utils.checkpoint import (
+    latest_step,
+    read_manifest,
+    restore_rng_state,
+    rng_state_tree,
+)
+
+CFG = SMALL_CNN
+
+HETERO = AvailabilityConfig(speed="lognormal", sigma=1.0,
+                            availability=0.3, mean_on=4.0)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    images, labels = make_class_conditional_images(800, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+    return data, params, loss, acc
+
+
+def _cfg(rounds=4, **kw):
+    return FLRunConfig(n_clients=8, participation=0.5, rounds=rounds,
+                       batch=8, local_iters=2, seed=1, **kw)
+
+
+def test_rng_state_roundtrip():
+    rng = np.random.RandomState(123)
+    rng.normal(size=7)  # leave a cached gaussian in the state
+    tree = rng_state_tree(rng)
+    rng2 = np.random.RandomState(0)
+    restore_rng_state(rng2, tree)
+    np.testing.assert_array_equal(rng.normal(size=16), rng2.normal(size=16))
+    np.testing.assert_array_equal(rng.choice(100, 10, replace=False),
+                                  rng2.choice(100, 10, replace=False))
+
+
+def test_sync_resume_matches_uninterrupted(setup, tmp_path):
+    """run-to-2R == run-to-R -> save -> restore -> run-to-2R (sync)."""
+    data, params, loss, acc = setup
+    method = METHODS["pfedsop"]
+    full = Federation(method(), loss, acc, params, data, _cfg()).run()
+
+    cfg = _cfg(ckpt_every=2, ckpt_dir=str(tmp_path / "sync"))
+    Federation(method(), loss, acc, params, data, cfg).run()
+    assert latest_step(cfg.ckpt_dir) == 4  # saved at rounds 2 and 4
+    assert read_manifest(cfg.ckpt_dir, 2)["extra"]["driver"] == "sync"
+
+    fed = Federation(method(), loss, acc, params, data, cfg)
+    assert fed.restore(step=2) == 2
+    resumed = fed.run()
+    assert resumed["loss"] == full["loss"]
+    assert resumed["acc"] == full["acc"]
+    assert resumed["sim_time"] == full["sim_time"]
+    assert resumed["mean_best_acc"] == full["mean_best_acc"]
+
+
+@pytest.mark.parametrize("method", ["pfedsop", "fedavg"])
+def test_async_resume_matches_uninterrupted(setup, tmp_path, method):
+    """Async resume, heterogeneous config: the checkpoint cut lands with
+    in-flight work and (typically) a partially filled buffer, and the
+    resumed event loop still reproduces the uninterrupted run bitwise."""
+    data, params, loss, acc = setup
+    acfg = AsyncConfig(buffer_size=2, concurrency=4, availability=HETERO)
+    make = lambda cfg: AsyncFederation(METHODS[method](), loss, acc, params,
+                                       data, cfg, acfg)
+    full = make(_cfg()).run()
+
+    cfg = _cfg(ckpt_every=2, ckpt_dir=str(tmp_path / f"async_{method}"))
+    make(cfg).run()
+    assert read_manifest(cfg.ckpt_dir, 2)["extra"]["driver"] == "async"
+
+    fed = make(cfg)
+    assert fed.restore(step=2) == 2
+    resumed = fed.run()
+    assert resumed["loss"] == full["loss"]
+    assert resumed["acc"] == full["acc"]
+    assert resumed["sim_time"] == full["sim_time"]
+    assert resumed["staleness"] == full["staleness"]
+    assert resumed["mean_best_acc"] == full["mean_best_acc"]
+
+
+def test_async_resume_mid_cohort_flush(setup, tmp_path):
+    """Checkpoint cut by a flush in the MIDDLE of a delivered micro-cohort.
+
+    Uniform speeds make the whole K'=4 cohort complete simultaneously;
+    buffer_size=3 does not divide it, so every flush leaves part of the
+    just-delivered cohort sitting in the buffer.  With ckpt_every=1 a
+    checkpoint lands on each of those flushes — the saved state must
+    include the not-yet-aggregated tail of the cohort, or the resumed run
+    diverges (regression: _deliver once flushed while appending)."""
+    data, params, loss, acc = setup
+    acfg = AsyncConfig(buffer_size=3)  # degenerate speeds, K' = 4
+    make = lambda cfg: AsyncFederation(METHODS["pfedsop"](), loss, acc, params,
+                                       data, cfg, acfg)
+    full = make(_cfg(rounds=5)).run()
+
+    cfg = _cfg(rounds=5, ckpt_every=1, ckpt_dir=str(tmp_path / "midflush"))
+    make(cfg).run()
+    mani = read_manifest(cfg.ckpt_dir, 2)["extra"]
+    assert mani["n_buffer"] > 0  # the cut really does land mid-cohort
+
+    fed = make(cfg)
+    assert fed.restore(step=2) == 2
+    resumed = fed.run()
+    assert resumed["loss"] == full["loss"]
+    assert resumed["acc"] == full["acc"]
+    assert resumed["staleness"] == full["staleness"]
+
+
+def test_sync_restore_rejects_async_checkpoint(setup, tmp_path):
+    data, params, loss, acc = setup
+    cfg = _cfg(rounds=2, ckpt_every=2, ckpt_dir=str(tmp_path / "mix2"))
+    AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg,
+                    AsyncConfig()).run()
+    fed = Federation(METHODS["pfedsop"](), loss, acc, params, data, cfg)
+    with pytest.raises(ValueError, match="driver"):
+        fed.restore()
+
+
+def test_async_restore_rejects_sync_checkpoint(setup, tmp_path):
+    data, params, loss, acc = setup
+    cfg = _cfg(rounds=2, ckpt_every=2, ckpt_dir=str(tmp_path / "mix"))
+    Federation(METHODS["pfedsop"](), loss, acc, params, data, cfg).run()
+    fed = AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg)
+    with pytest.raises(ValueError, match="driver"):
+        fed.restore()
+
+
+def test_mean_best_acc_counts_zero_acc_participants(setup):
+    """The participated mask replaces the old ``best_acc > 0`` proxy: a
+    participating client whose best accuracy is legitimately 0.0 must
+    drag the mean down, not silently vanish from it."""
+    data, params, loss, acc = setup
+    fed = Federation(METHODS["pfedsop"](), loss, acc, params, data,
+                     _cfg(rounds=2))
+    hist = fed.run()
+    assert hist["mean_best_acc"] == float(
+        np.mean(fed.best_acc[fed.participated]))
+    # the regression scenario: participants pinned to best acc 0.0 must
+    # yield mean 0.0 (the old ``best_acc > 0`` proxy dropped them all and
+    # np.mean of the empty selection returned nan)
+    fed.best_acc[fed.participated] = 0.0
+    with_zero = (float(np.mean(fed.best_acc[fed.participated]))
+                 if fed.participated.any() else 0.0)
+    assert with_zero == 0.0
+
+
+def test_participated_tracks_rounds_seen(setup):
+    data, params, loss, acc = setup
+    fed = Federation(METHODS["pfedsop"](), loss, acc, params, data,
+                     _cfg(rounds=3))
+    fed.run()
+    seen = np.asarray(fed.client_states.rounds_seen)
+    np.testing.assert_array_equal(fed.participated, seen > 0)
