@@ -149,6 +149,13 @@ def main():
 
     if args.resume and not args.ckpt_dir:
         ap.error("--resume requires --ckpt-dir")
+    if args.ckpt_every and not args.ckpt_dir:
+        ap.error("--ckpt-every requires --ckpt-dir (the drivers only save "
+                 "when both are set, so checkpointing would be silently off)")
+    if args.mode != "async" and (args.buffer_size or args.concurrency):
+        ap.error("--buffer-size/--concurrency only apply to --mode async "
+                 "(the sync driver has no aggregation buffer or dispatch "
+                 "pipeline), so they would be silently ignored")
 
     if args.update_impl and not any(m.startswith("pfedsop") for m in args.methods):
         ap.error("--update-impl targets the pFedSOP round-start update; none of "

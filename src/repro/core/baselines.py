@@ -64,6 +64,9 @@ class FLMethod(Protocol):
         pFedSOP instead composes the discount with the Gompertz angle
         weight (``repro.core.pfedsop.stale_blend``) so stale deltas are
         down-blended toward the global update, not just down-averaged.
+        Only the asynchronous driver calls this hook, so a sync-only
+        custom method may omit it (``validate_method`` requires it only
+        for ``AsyncFederation``).
     eval_params(state, broadcast) -> params
         The parameters a client deploys for local test accuracy
         (personalized methods return per-client params; FedAvg-family

@@ -53,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.availability import AvailabilityConfig, ClientAvailability
-from repro.fl.runtime import Federation, FLRunConfig
+from repro.fl.runtime import Federation, FLRunConfig, validate_method
 from repro.fl.scheduler import RoundScheduler
 from repro.utils.checkpoint import load_checkpoint, read_manifest, save_checkpoint
 
@@ -92,6 +92,10 @@ class AsyncFederation(Federation):
 
     def __init__(self, method, loss_fn, acc_fn, init_params, data,
                  run_cfg: FLRunConfig, async_cfg: Optional[AsyncConfig] = None):
+        # the async driver is the sole caller of server_update_stale, so
+        # the hook is required here (and only here), before _init_core
+        # touches the method
+        validate_method(method, require_stale_hook=True)
         self._init_core(method, loss_fn, acc_fn, init_params, data, run_cfg)
         acfg = async_cfg or run_cfg.async_cfg or AsyncConfig()
         if not isinstance(acfg, AsyncConfig):
@@ -144,9 +148,15 @@ class AsyncFederation(Federation):
                     f"tau={self._history['staleness'][-1]:.2f}"
                 )
         history = self._finalize_history()
+        # describe an engine that actually ran (the largest cohort seen):
+        # with concurrency < K' a kprime-sized engine never executes, and
+        # describing a freshly built one could report e.g. a shard count
+        # no micro-cohort used
+        seen = self.programs.seen_cohorts()
         history["engine"] = {
-            **self.programs.engine(self.kprime).describe(),
+            **self.programs.engine(seen[-1] if seen else self.kprime).describe(),
             "mode": "async",
+            "cohort_sizes": seen,
             "buffer_size": self.buffer_size,
             "concurrency": self.concurrency,
         }
@@ -156,6 +166,13 @@ class AsyncFederation(Federation):
         """One event-loop transition: dispatch at the current sim time if
         possible, else advance the clock to the next event (completion or
         availability wakeup) and deliver any completions."""
+        # a restored checkpoint written by a non-final flush of a
+        # multi-flush delivery still holds >= buffer_size uploads; the
+        # uninterrupted run applied those flushes before dispatching
+        # again, so drain first (a no-op otherwise: _deliver drains)
+        self._drain()
+        if self._round >= self.cfg.rounds:
+            return  # the drain finished the budget; don't dispatch past it
         ids = self.scheduler.dispatch_group(self.sim_time, self.rng)
         if len(ids):
             self._dispatch(ids)
@@ -234,7 +251,15 @@ class AsyncFederation(Federation):
                 "acc": a,
                 "version": it["version"],
             })
-        while len(self._buffer) >= self.buffer_size:
+        self._drain()
+
+    def _drain(self):
+        """Apply buffered updates until the buffer drops below
+        ``buffer_size`` — capped at the round budget, so a delivery
+        holding several flushes' worth of uploads never pushes the
+        history past ``cfg.rounds`` applied server updates."""
+        while (len(self._buffer) >= self.buffer_size
+               and self._round < self.cfg.rounds):
             self._flush()
 
     def _flush(self):
@@ -304,12 +329,22 @@ class AsyncFederation(Federation):
             }
         return tree
 
+    def _acfg_fingerprint(self) -> dict:
+        """Resolved async-only configuration, stamped into the checkpoint
+        manifest so restore can reject a config-mismatched resume (which
+        would silently break the bitwise-continuation contract); the
+        availability model travels in the base ``_run_fingerprint``."""
+        return {"buffer_size": self.buffer_size,
+                "concurrency": self.concurrency}
+
     def save(self, ckpt_dir) -> str:
         return save_checkpoint(
             ckpt_dir, self._round, self._ckpt_tree(),
             extra={"round": self._round, "sim_time": self.sim_time,
                    "driver": "async", "n_pending": len(self._pending),
-                   "n_buffer": len(self._buffer)},
+                   "n_buffer": len(self._buffer),
+                   "run_cfg": self._run_fingerprint(),
+                   "async_cfg": self._acfg_fingerprint()},
         )
 
     def _upload_struct(self):
@@ -340,6 +375,15 @@ class AsyncFederation(Federation):
             raise ValueError(
                 f"checkpoint at {ckpt_dir} was written by the "
                 f"{ex.get('driver')!r} driver, not 'async'"
+            )
+        self._check_run_fingerprint(ex, ckpt_dir)
+        want = self._acfg_fingerprint()
+        if ex.get("async_cfg") != want:
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} was written with async config "
+                f"{ex.get('async_cfg')}, but this driver resolved to {want}; "
+                "resuming across a buffer_size/concurrency change is not "
+                "a bitwise continuation"
             )
         tmpl = self._ckpt_template(bool(ex["n_pending"]), bool(ex["n_buffer"]))
         tree, extra = load_checkpoint(ckpt_dir, tmpl, step=manifest["step"])

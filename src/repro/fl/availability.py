@@ -31,6 +31,7 @@ that asymmetry is exactly what the ``async-engine`` bench measures.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass
 
 import numpy as np
@@ -122,7 +123,10 @@ class ClientAvailability:
         if self._always_on:
             return True
         tr = self._trace(client, t)
-        j = int(np.searchsorted(tr["bounds"], t, side="right")) - 1
+        # bisect on the list itself: np.searchsorted would convert the
+        # ever-growing trace to an array on EVERY query, degrading long
+        # simulations quadratically with trace length
+        j = bisect.bisect_right(tr["bounds"], t) - 1
         return tr["start_on"] ^ (j % 2 == 1)
 
     def next_online(self, client: int, t: float) -> float:
@@ -136,7 +140,7 @@ class ClientAvailability:
         # bounds[-1] > t after _trace, so this index always exists: it is
         # the end of the offline period containing t == the next on-start
         # (periods strictly alternate)
-        j = int(np.searchsorted(bounds, t, side="right"))
+        j = bisect.bisect_right(bounds, t)
         return float(bounds[j])
 
     # -- bulk-synchronous cost model --------------------------------------

@@ -52,14 +52,22 @@ Pytree = Any
 _METHOD_INTERFACE = tuple(
     a for a, v in vars(FLMethod).items() if callable(v) and not a.startswith("_")
 )
+# the staleness hook is exercised by the async driver alone — a sync-only
+# custom method may omit it (AsyncFederation re-validates with the hook)
+_SYNC_METHOD_INTERFACE = tuple(
+    a for a in _METHOD_INTERFACE if a != "server_update_stale"
+)
 
 
-def validate_method(method) -> None:
+def validate_method(method, require_stale_hook: bool = False) -> None:
     """Fail fast (with the contract spelled out) on a malformed method.
 
     The full interface is documented once on ``repro.core.baselines.FLMethod``.
+    ``server_update_stale`` is only required when ``require_stale_hook`` is
+    set (the async driver is its sole caller, DESIGN.md §10).
     """
-    missing = [a for a in _METHOD_INTERFACE if not callable(getattr(method, a, None))]
+    interface = _METHOD_INTERFACE if require_stale_hook else _SYNC_METHOD_INTERFACE
+    missing = [a for a in interface if not callable(getattr(method, a, None))]
     if missing or not isinstance(getattr(method, "name", None), str):
         raise TypeError(
             f"{type(method).__name__} does not implement the FLMethod interface "
@@ -175,6 +183,10 @@ class RoundPrograms:
         self.aggregate = jax.jit(_aggregate)
         self.aggregate_stale = jax.jit(_aggregate_stale)
         self.scatter = jax.jit(_scatter)
+
+    def seen_cohorts(self):
+        """Cohort sizes an engine was actually instantiated for (sorted)."""
+        return sorted(self._engines)
 
     def engine(self, cohort: int):
         eng = self._engines.get(cohort)
@@ -375,30 +387,67 @@ class Federation:
                         for key, v in self._history.items()},
         }
 
+    def _run_fingerprint(self) -> dict:
+        """Config facets a resumed run must share with the checkpoint
+        writer for the restored RNG/clock streams to continue bitwise:
+        the sampling/data-shape knobs plus the availability model.
+        ``rounds`` is excluded on purpose (extending the budget keeps the
+        common prefix bitwise), as are backend/shards, whose histories
+        are parity-tested bit-exact across settings (tests/test_engine.py).
+        """
+        av = getattr(self, "availability", None)
+        return {
+            "seed": self.cfg.seed,
+            "n_clients": self.cfg.n_clients,
+            "participation": self.cfg.participation,
+            "batch": self.cfg.batch,
+            "local_iters": self.cfg.local_iters,
+            "update_impl": self.cfg.update_impl,
+            "availability": None if av is None else dataclasses.asdict(av.cfg),
+        }
+
+    def _check_run_fingerprint(self, extra: dict, ckpt_dir) -> None:
+        want = self._run_fingerprint()
+        if extra.get("run_cfg") != want:
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} was written with run config "
+                f"{extra.get('run_cfg')}, but this driver is configured "
+                f"with {want}; resuming across a config change is not a "
+                "bitwise continuation"
+            )
+
     def save(self, ckpt_dir) -> str:
         """Checkpoint the full driver state after ``self._round`` rounds."""
         return save_checkpoint(
             ckpt_dir, self._round, self._ckpt_tree(),
             extra={"round": self._round, "sim_time": self.sim_time,
-                   "driver": "sync"},
+                   "driver": "sync", "run_cfg": self._run_fingerprint()},
         )
 
     def restore(self, ckpt_dir=None, step=None) -> int:
         """Restore state saved by ``save``; returns the round to resume at.
 
         Must be called on a freshly constructed, identically configured
-        federation; the resumed run reproduces the uninterrupted loss/acc
+        federation (the manifest's stamped config fingerprint rejects a
+        mismatch); the resumed run reproduces the uninterrupted loss/acc
         history bitwise (tests/test_checkpoint_resume.py).
         """
         ckpt_dir = ckpt_dir or self.cfg.ckpt_dir
-        driver = read_manifest(ckpt_dir, step)["extra"].get("driver")
+        manifest = read_manifest(ckpt_dir, step)
+        ex = manifest["extra"]
+        driver = ex.get("driver")
         if driver != "sync":
             raise ValueError(
                 f"checkpoint at {ckpt_dir} was written by the {driver!r} "
                 "driver, not 'sync'; resume it with the matching driver "
                 "(e.g. train_federated.py --mode async)"
             )
-        tree, extra = load_checkpoint(ckpt_dir, self._ckpt_template(), step=step)
+        self._check_run_fingerprint(ex, ckpt_dir)
+        # pin the validated manifest's step: with step=None a concurrent
+        # writer could land a new latest between the two reads, loading
+        # arrays the driver/fingerprint checks never saw
+        tree, extra = load_checkpoint(ckpt_dir, self._ckpt_template(),
+                                      step=manifest["step"])
         self._restore_core(tree, extra)
         return self._round
 

@@ -232,8 +232,10 @@ def test_staleness_weights_mean_one():
         np.ones(5, np.float32))
 
 
-def test_validate_method_requires_stale_hook(setup):
-    """server_update_stale is part of the FLMethod contract now."""
+def test_stale_hook_required_only_for_async(setup):
+    """server_update_stale is the async driver's hook: a sync-only custom
+    method without it still passes the synchronous contract check, but
+    AsyncFederation (and require_stale_hook validation) reject it."""
     from repro.fl.runtime import validate_method
 
     class NoStale:
@@ -245,8 +247,12 @@ def test_validate_method_requires_stale_hook(setup):
         def server_update(self, *a): return None
         def eval_params(self, *a): return None
 
+    validate_method(NoStale())  # the synchronous contract is satisfied
     with pytest.raises(TypeError, match="server_update_stale"):
-        validate_method(NoStale())
+        validate_method(NoStale(), require_stale_hook=True)
+    data, params, loss, acc = setup
+    with pytest.raises(TypeError, match="server_update_stale"):
+        AsyncFederation(NoStale(), loss, acc, params, data, _run_cfg())
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +273,23 @@ def test_heterogeneous_async_runs_and_is_stale(setup):
     assert min(h["staleness"]) >= 0.0
     assert max(h["staleness"]) > 0.0  # heterogeneity => stale uploads
     assert h["engine"]["buffer_size"] == 2
+    # the described engine is one that actually ran: every recorded
+    # cohort size is bounded by the in-flight cap
+    assert h["engine"]["cohort_sizes"]
+    assert max(h["engine"]["cohort_sizes"]) <= 4
+
+
+def test_round_budget_caps_multi_flush_delivery(setup):
+    """The drain stops at cfg.rounds: with buffer_size=1 a simultaneously
+    delivered K'=4 cohort holds 4 flushes, and a budget that does not
+    align with the cohort size must not overshoot (regression: rounds=6
+    once returned 8 history entries and 8 applied server updates)."""
+    acfg = AsyncConfig(buffer_size=1, concurrency=4)  # uniform speeds
+    h = _async(setup, async_cfg=acfg, rounds=6)
+    assert len(h["loss"]) == 6
+    assert len(h["acc"]) == 6
+    assert len(h["staleness"]) == 6
+    assert len(h["sim_time"]) == 6
 
 
 def test_heterogeneous_async_deterministic(setup):

@@ -139,6 +139,37 @@ def test_async_resume_mid_cohort_flush(setup, tmp_path):
     assert resumed["staleness"] == full["staleness"]
 
 
+def test_async_resume_from_intermediate_flush(setup, tmp_path):
+    """Checkpoint written by a NON-final flush of a multi-flush delivery:
+    the restored buffer still holds >= buffer_size uploads.  The resumed
+    run must drain those flushes before dispatching the next micro-cohort,
+    exactly as the uninterrupted run did (regression: _step once
+    dispatched first, so the next cohort trained against an older
+    broadcast and recorded lower versions — wrong staleness, diverging
+    loss history)."""
+    data, params, loss, acc = setup
+    acfg = AsyncConfig(buffer_size=1, concurrency=4)  # uniform speeds, K'=4
+    make = lambda cfg: AsyncFederation(METHODS["pfedsop"](), loss, acc, params,
+                                       data, cfg, acfg)
+    full = make(_cfg(rounds=8)).run()
+
+    cfg = _cfg(rounds=8, ckpt_every=1, ckpt_dir=str(tmp_path / "interflush"))
+    make(cfg).run()
+    # version 1 = first flush of a simultaneously-delivered 4-cohort: the
+    # saved buffer still holds the 3 remaining uploads (>= buffer_size)
+    mani = read_manifest(cfg.ckpt_dir, 1)["extra"]
+    assert mani["n_buffer"] >= acfg.buffer_size
+
+    fed = make(cfg)
+    assert fed.restore(step=1) == 1
+    resumed = fed.run()
+    assert resumed["loss"] == full["loss"]
+    assert resumed["acc"] == full["acc"]
+    assert resumed["staleness"] == full["staleness"]
+    assert resumed["sim_time"] == full["sim_time"]
+    assert resumed["mean_best_acc"] == full["mean_best_acc"]
+
+
 def test_sync_restore_rejects_async_checkpoint(setup, tmp_path):
     data, params, loss, acc = setup
     cfg = _cfg(rounds=2, ckpt_every=2, ckpt_dir=str(tmp_path / "mix2"))
@@ -156,6 +187,38 @@ def test_async_restore_rejects_sync_checkpoint(setup, tmp_path):
     fed = AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg)
     with pytest.raises(ValueError, match="driver"):
         fed.restore()
+
+
+def test_sync_restore_rejects_config_mismatch(setup, tmp_path):
+    """Resuming under a different run config (here: participation) would
+    replay the restored RNG stream over different cohort shapes and
+    silently diverge; the stamped run fingerprint rejects it."""
+    data, params, loss, acc = setup
+    cfg = _cfg(rounds=2, ckpt_every=2, ckpt_dir=str(tmp_path / "syncmix"))
+    Federation(METHODS["pfedsop"](), loss, acc, params, data, cfg).run()
+    bad = replace(cfg, participation=0.25)
+    fed = Federation(METHODS["pfedsop"](), loss, acc, params, data, bad)
+    with pytest.raises(ValueError, match="run config"):
+        fed.restore()
+
+
+def test_async_restore_rejects_config_mismatch(setup, tmp_path):
+    """Resuming with a different resolved AsyncConfig would silently
+    break the bitwise-continuation contract (different flush cadence,
+    different staleness): the stamped manifest fingerprint rejects it."""
+    data, params, loss, acc = setup
+    cfg = _cfg(rounds=2, ckpt_every=2, ckpt_dir=str(tmp_path / "cfgmix"))
+    AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg,
+                    AsyncConfig(buffer_size=2)).run()
+    fed = AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg,
+                          AsyncConfig(buffer_size=4))
+    with pytest.raises(ValueError, match="async config"):
+        fed.restore()
+    # identical resolved config (0 resolves to K' = 4 = the saved
+    # concurrency) restores fine
+    ok = AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg,
+                         AsyncConfig(buffer_size=2, concurrency=0))
+    assert ok.restore() == 2
 
 
 def test_mean_best_acc_counts_zero_acc_participants(setup):
