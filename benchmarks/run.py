@@ -33,6 +33,11 @@ Mapping to the paper (Sen & Mohan 2025):
            Asserts async reaches the target in less simulated time AND
            that the staleness-weighted pFedSOP path still matches the
            fused-kernel dispatch (--interpret / automatic off-TPU)
+  multipod-engine  mesh-engine shootout (DESIGN.md §11): rounds/sec and
+           simulated time-to-target across {vmap, 1-D shard_map,
+           multi-pod (2,2,2) mesh} x {sync, async}, asserting bitwise
+           cross-backend history parity and model-sharded-kernel vs
+           reference drift; needs 8 devices (CI forces host devices)
   model-fwd model-zoo forward tokens/sec per kernel impl x config
            (DESIGN.md §9, ``ModelConfig.kernel_impl``): reference vs
            kernel_interpret on a sliding-window (gemma3) and a
@@ -421,6 +426,116 @@ def bench_async_engine(rounds, interpret=False):
     return out
 
 
+def bench_multipod_engine(rounds, interpret=False):
+    """Mesh-engine shootout (DESIGN.md §11): {vmap, 1-D shard_map,
+    multi-pod mesh} x {sync, async} on a reduced (2,2,2) production mesh.
+
+    Needs 8 local devices (CI runs it under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8); on a smaller box
+    it reports what it can and marks the multi-pod column skipped.
+
+    Reported: rounds/sec per backend x driver, plus simulated
+    time-to-target-accuracy under heterogeneous availability (lognormal
+    speeds + 30% availability).  Asserted, not just reported: (a) same
+    impl, different backend => BITWISE identical loss histories (the §11
+    replicated-output determinism contract — simulated clocks included,
+    so time-to-target is backend-invariant by construction); (b)
+    reference vs kernel impl on the multi-pod mesh => drift < 1e-4 with
+    the model-sharded batched kernel on the hot path.
+    """
+    print("\n== multipod-engine: backend x driver, reduced (2,2,2) mesh ==")
+    kernel_impl = ("kernel_interpret"
+                   if interpret or jax.default_backend() != "tpu" else "kernel")
+    n_dev = len(jax.devices())
+    backends = [("vmap", ""), ("shard_map", "")]
+    if n_dev >= 8:
+        backends.append(("mesh", "pods:2x2x2"))
+    else:
+        print(f"bench,multipod-engine/skip,0,devices={n_dev}_of_8 "
+              "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+    clients, participation = 8, 0.5  # K' = 4: divides pods(2) and devices
+    r = max(4, rounds // 2)
+    data = _data("dirichlet", clients=clients, samples=200 * clients)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    avail = AvailabilityConfig(speed="lognormal", sigma=1.0,
+                               availability=0.3, mean_on=4.0)
+    kprime = int(round(participation * clients))
+    buffer_size = kprime  # same server-update budget across drivers
+
+    def _cfg(backend, mesh, update_impl):
+        return FLRunConfig(n_clients=clients, participation=participation,
+                           rounds=r, batch=25, seed=0, backend=backend,
+                           mesh=mesh, update_impl=update_impl)
+
+    def time_to(hist, target):
+        best = np.maximum.accumulate(hist["acc"])
+        hit = np.nonzero(best >= target)[0]
+        return float(hist["sim_time"][hit[0]]) if len(hit) else None
+
+    out = {"kernel_impl": kernel_impl, "devices": n_dev,
+           "backends": {}, "skipped_multipod": n_dev < 8}
+    ref_hist = {}  # driver -> reference loss history (backend-invariant)
+    for backend, mesh in backends:
+        row = {}
+        for driver in ["sync", "async"]:
+            method = _build("pfedsop")
+            for impl in ([kernel_impl, "reference"]
+                         if backend == "mesh" else [kernel_impl]):
+                cfg = _cfg(backend, mesh, impl)
+                if driver == "sync":
+                    fed = Federation(method, loss, acc, params, data, cfg,
+                                     availability=ClientAvailability(
+                                         avail, clients, 0))
+                else:
+                    fed = AsyncFederation(
+                        method, loss, acc, params, data, cfg,
+                        AsyncConfig(buffer_size=buffer_size,
+                                    concurrency=kprime, availability=avail))
+                h = fed.run()
+                if impl == "reference":
+                    # multi-pod kernel parity: model-sharded kernel vs the
+                    # pytree reference (fp32 reduction-order tolerance)
+                    drift = float(np.max(np.abs(
+                        np.asarray(h["loss"])
+                        - np.asarray(row[driver]["loss"]))))
+                    assert drift < 1e-4, (
+                        f"model-sharded kernel diverged from reference "
+                        f"({driver}): {drift}")
+                    row[driver]["kernel_vs_reference_drift"] = drift
+                    continue
+                t = float(np.mean(h["round_time"][1:]))
+                target = 0.8 * max(h["acc"])
+                row[driver] = {
+                    "rounds_per_sec": 1.0 / max(t, 1e-9),
+                    "sim_time_to_target": time_to(h, target),
+                    "sim_time_total": h["sim_time"][-1],
+                    "loss": h["loss"],
+                }
+                # same impl, any backend: bitwise history parity (§11)
+                if driver not in ref_hist:
+                    ref_hist[driver] = h["loss"]
+                else:
+                    assert ref_hist[driver] == h["loss"], (
+                        f"{backend}/{driver}: loss history must be BITWISE "
+                        "identical across backends (replicated-output "
+                        "contract, DESIGN.md §11)")
+                print(f"bench,multipod-engine/{backend}/{driver},{t*1e6:.0f},"
+                      f"rounds_per_sec={1.0/max(t,1e-9):.3f},"
+                      f"sim_t_total={h['sim_time'][-1]:.2f}")
+        out["backends"][backend] = {
+            d: {key: v for key, v in row[d].items() if key != "loss"}
+            for d in row
+        }
+    print(f"{'backend':>10} {'sync r/s':>9} {'async r/s':>10}")
+    for backend, row in out["backends"].items():
+        print(f"{backend:>10} {row['sync']['rounds_per_sec']:>9.3f} "
+              f"{row['async']['rounds_per_sec']:>10.3f}")
+    return out
+
+
 def bench_model_fwd():
     """Model-zoo forward throughput per kernel impl x config (DESIGN.md §9).
 
@@ -543,6 +658,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "pfedsop-update": bench_pfedsop_update,
     "async-engine": bench_async_engine,
+    "multipod-engine": bench_multipod_engine,
     "model-fwd": bench_model_fwd,
     "roofline": bench_roofline,
 }
@@ -596,7 +712,7 @@ def main():
         fn = BENCHES[name]
         if name in ("kernels", "model-fwd", "roofline"):
             results[name] = fn()
-        elif name in ("pfedsop-update", "async-engine"):
+        elif name in ("pfedsop-update", "async-engine", "multipod-engine"):
             results[name] = fn(args.rounds, interpret=args.interpret)
         else:
             results[name] = fn(args.rounds)

@@ -16,6 +16,16 @@ Examples:
   PYTHONPATH=src python examples/train_federated.py --mode async \
       --speed lognormal --availability 0.3 --buffer-size 4
 
+  # replay a recorded device trace instead of the generative model
+  PYTHONPATH=src python examples/train_federated.py --mode async \
+      --availability trace:examples/traces/device_trace_8.json
+
+  # multi-pod mesh engine (DESIGN.md §11): cohort over 2 pods, model=2
+  # tensor shards per pod (8 devices; forced host devices on CPU)
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python examples/train_federated.py \
+      --backend mesh --mesh pods:2x2x2
+
   # checkpoint every 5 server updates and resume an interrupted run
   PYTHONPATH=src python examples/train_federated.py --mode async \
       --ckpt-every 5 --ckpt-dir experiments/ckpt/demo
@@ -47,9 +57,10 @@ from repro.fl import (
     AsyncConfig,
     AsyncFederation,
     AvailabilityConfig,
-    ClientAvailability,
     Federation,
     FLRunConfig,
+    TraceAvailabilityConfig,
+    make_availability,
 )
 from repro.fl.runtime import masked_accuracy
 from repro.models import cnn
@@ -95,11 +106,21 @@ def main():
     ap.add_argument("--mu", type=float, default=0.1)
     ap.add_argument("--ditto-lam", type=float, default=0.1)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=["vmap", "shard_map"], default="vmap",
-                    help="federation engine backend (DESIGN.md §3); shard_map "
-                         "splits the participating clients across local devices")
+    ap.add_argument("--backend", choices=["vmap", "shard_map", "mesh"],
+                    default="vmap",
+                    help="federation engine backend (DESIGN.md §3/§11); "
+                         "shard_map splits the participating clients across "
+                         "local devices on a 1-D mesh; mesh runs the "
+                         "role-named mesh engine selected by --mesh")
     ap.add_argument("--shards", type=int, default=0,
                     help="shard_map only: device-shard count (0 = auto)")
+    ap.add_argument("--mesh", default="",
+                    help="mesh backend only: mesh spec (repro.launch.mesh."
+                         "parse_mesh) — 'clients[:N]' | 'host' | 'pod:DxM' | "
+                         "'pods:PxDxM'; e.g. 'pods:2x2x2' shards the cohort "
+                         "over 2 pods with model=2 tensor shards each "
+                         "(8 devices; run under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 on CPU)")
     ap.add_argument("--update-impl", default="",
                     choices=["", "auto", "reference", "kernel", "kernel_interpret"],
                     help="pFedSOP round-start update impl (DESIGN.md §9): "
@@ -128,9 +149,12 @@ def main():
                     help="lognormal sigma of the per-client speed multipliers")
     ap.add_argument("--mean-duration", type=float, default=1.0,
                     help="median simulated client round duration (sim seconds)")
-    ap.add_argument("--availability", type=float, default=1.0,
-                    help="steady-state online fraction per client (1.0 = "
-                         "always on); exponential on/off traces")
+    ap.add_argument("--availability", default="1.0",
+                    help="either a steady-state online fraction per client "
+                         "(float; 1.0 = always on, exponential on/off "
+                         "traces) or 'trace:<path>' to replay a recorded "
+                         "device trace file (JSON on/off windows + "
+                         "durations; see examples/traces/)")
     ap.add_argument("--mean-on", type=float, default=10.0,
                     help="mean online-stretch length (sim seconds)")
     # -- checkpointing ----------------------------------------------------
@@ -156,6 +180,27 @@ def main():
         ap.error("--buffer-size/--concurrency only apply to --mode async "
                  "(the sync driver has no aggregation buffer or dispatch "
                  "pipeline), so they would be silently ignored")
+    if args.mesh and args.backend != "mesh":
+        ap.error("--mesh only applies to --backend mesh (the other backends "
+                 "fix their own layout), so it would be silently ignored")
+    if args.backend == "mesh" and not args.mesh:
+        ap.error("--backend mesh requires --mesh (e.g. 'pods:2x2x2'); see "
+                 "repro.launch.mesh.parse_mesh for the grammar")
+
+    trace_path = None
+    if args.availability.startswith("trace:"):
+        trace_path = args.availability[len("trace:"):]
+        if (args.speed != "fixed" or args.speed_sigma != 1.0
+                or args.mean_duration != 1.0 or args.mean_on != 10.0):
+            ap.error("--availability trace:<path> replays durations and "
+                     "on/off windows from the file; --speed/--speed-sigma/"
+                     "--mean-duration/--mean-on would be silently ignored")
+    else:
+        try:
+            args.availability = float(args.availability)
+        except ValueError:
+            ap.error(f"--availability must be a float or 'trace:<path>', "
+                     f"got {args.availability!r}")
 
     if args.update_impl and not any(m.startswith("pfedsop") for m in args.methods):
         ap.error("--update-impl targets the pFedSOP round-start update; none of "
@@ -184,11 +229,14 @@ def main():
     acc = masked_accuracy(lambda p, t: cnn.apply(p, cfg, t["images"]))
     params = cnn.init_params(jax.random.PRNGKey(args.seed), cfg)  # same init for all
 
-    avail_cfg = AvailabilityConfig(
-        speed=args.speed, mean_duration=args.mean_duration,
-        sigma=args.speed_sigma, availability=args.availability,
-        mean_on=args.mean_on,
-    )
+    if trace_path is not None:
+        avail_cfg = TraceAvailabilityConfig(path=trace_path)
+    else:
+        avail_cfg = AvailabilityConfig(
+            speed=args.speed, mean_duration=args.mean_duration,
+            sigma=args.speed_sigma, availability=args.availability,
+            mean_on=args.mean_on,
+        )
     async_cfg = AsyncConfig(
         buffer_size=args.buffer_size, concurrency=args.concurrency,
         availability=avail_cfg,
@@ -196,7 +244,7 @@ def main():
     run_cfg = FLRunConfig(
         n_clients=args.clients, participation=args.participation,
         rounds=args.rounds, batch=args.batch, seed=args.seed,
-        backend=args.backend, shards=args.shards,
+        backend=args.backend, shards=args.shards, mesh=args.mesh,
         update_impl=args.update_impl,
         ckpt_every=args.ckpt_every,
         async_cfg=async_cfg,
@@ -219,7 +267,7 @@ def main():
             # the sync driver stays availability-oblivious (it samples and
             # waits for stragglers) but uses the same heterogeneity model
             # for its simulated clock, so sim_time is comparable
-            model = ClientAvailability(avail_cfg, args.clients, args.seed)
+            model = make_availability(avail_cfg, args.clients, args.seed)
             fed = Federation(method, loss, acc, params, data, cfg_m,
                              availability=model)
         if args.resume and latest_step(cfg_m.ckpt_dir) is not None:

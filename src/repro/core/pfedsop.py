@@ -161,24 +161,50 @@ def sherman_morrison_step(delta_p: Pytree, rho):
 
 
 @functools.lru_cache(maxsize=None)
-def _fused_flat_update(eta1, rho, lam, eps, interpret):
+def _fused_flat_update(eta1, rho, lam, eps, interpret, shard=None):
     """Flat-vector fused update with a custom vmap rule (cached per-config).
 
     The primal runs the single-client kernel; the vmap rule — fired by the
-    engines' per-client ``jax.vmap`` (also inside ``ShardMapBackend``'s
+    engines' per-client ``jax.vmap`` (also inside the mesh engines'
     shard_map body, where it sees each shard's local client slice) —
     dispatches the whole batch to the (clients, N) grid kernel in one
     launch.  An unbatched global delta (the usual replicated server
     broadcast) is passed through as (N,) so the kernel reads one shared
     buffer instead of materializing C copies.
+
+    ``shard`` is the ``(model_axis_name, n_shards)`` announced by a mesh
+    engine whose mesh carries a model-role axis
+    (``repro.kernels.dispatch.model_shard_axis``, DESIGN.md §11): both the
+    primal and the batched rule then take the model-sharded kernel layout,
+    which splits the flattened-N tile rows over the mesh axis and combines
+    the three Gompertz scalars with a cross-shard psum — bit-identical to
+    the unsharded kernel.
     """
     from repro.kernels.pfedsop_update.ops import (
         pfedsop_update,
         pfedsop_update_batched,
+        pfedsop_update_batched_sharded,
     )
+
+    if shard:
+        axis_name, n_shards = shard
+
+        def _batched(x, di, dg):
+            return pfedsop_update_batched_sharded(
+                x, di, dg, axis_name, n_shards, eta1=eta1, rho=rho, lam=lam,
+                eps=eps, interpret=interpret)
+    else:
+
+        def _batched(x, di, dg):
+            return pfedsop_update_batched(x, di, dg, eta1=eta1, rho=rho,
+                                          lam=lam, eps=eps,
+                                          interpret=interpret)
 
     @jax.custom_batching.custom_vmap
     def fused(x, di, dg):
+        if shard:  # unvmapped single client: the batched layout with C=1
+            out, beta = _batched(x[None], di[None], dg)
+            return out[0], beta[0]
         return pfedsop_update(x, di, dg, eta1=eta1, rho=rho, lam=lam,
                               eps=eps, interpret=interpret)
 
@@ -189,9 +215,7 @@ def _fused_flat_update(eta1, rho, lam, eps, interpret):
             x = jnp.broadcast_to(x, (axis_size,) + x.shape)
         if not di_b:
             di = jnp.broadcast_to(di, (axis_size,) + di.shape)
-        out, beta = pfedsop_update_batched(x, di, dg, eta1=eta1, rho=rho,
-                                           lam=lam, eps=eps,
-                                           interpret=interpret)
+        out, beta = _batched(x, di, dg)
         return (out, beta), (True, True)
 
     return fused
@@ -205,11 +229,16 @@ def _personalize_fused(params, local_delta, global_delta, cfg, interpret):
     in the reference) — numerically equal up to fp32 reduction order.
     ``aux`` carries only beta; the reference path's extra diagnostics
     (sim/theta/...) would need a third sweep the fusion exists to avoid.
+    The model-shard context (set by a §11 mesh engine around body tracing)
+    is read host-side here, so the sharded layout is baked into the trace.
     """
+    from repro.kernels.dispatch import current_model_shard
+
     xv = tree_flatten_to_vector(params)
     div = tree_flatten_to_vector(local_delta)
     dgv = tree_flatten_to_vector(global_delta)
-    fused = _fused_flat_update(cfg.eta1, cfg.rho, cfg.lam, cfg.eps, interpret)
+    fused = _fused_flat_update(cfg.eta1, cfg.rho, cfg.lam, cfg.eps, interpret,
+                               shard=current_model_shard())
     new_v, beta = fused(xv, div, dgv)
     return tree_unflatten_from_vector(new_v, params), {"beta": beta}
 

@@ -1,22 +1,29 @@
-"""FL runtime: backend-pluggable federation engine (vmap / shard_map).
+"""FL runtime: backend-pluggable federation engine (vmap / shard_map / mesh).
 
 ``Federation`` drives the synchronous round loop; ``AsyncFederation``
 (DESIGN.md §10) replaces it with an availability-aware discrete-event
 simulation with FedBuff-style staleness-weighted buffered aggregation.
 Both share the jitted phase programs in ``repro.fl.runtime.RoundPrograms``
-and the engine backends (DESIGN.md §3).  See README.md for the repo map.
+and the engine backends (DESIGN.md §3; the multi-pod ``MeshBackend`` and
+its role-named mesh layer are DESIGN.md §11).  See README.md for the repo
+map.
 """
 from repro.fl.async_ import AsyncConfig, AsyncFederation  # noqa: F401
 from repro.fl.availability import (  # noqa: F401
     AvailabilityConfig,
     ClientAvailability,
+    TraceAvailability,
+    TraceAvailabilityConfig,
+    make_availability,
 )
 from repro.fl.engine import (  # noqa: F401
     BACKENDS,
     FederationEngine,
+    MeshBackend,
     ShardMapBackend,
     VmapBackend,
     make_engine,
+    resolve_client_split,
     resolve_shards,
 )
 from repro.fl.runtime import (  # noqa: F401

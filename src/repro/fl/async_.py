@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.availability import AvailabilityConfig, ClientAvailability
+from repro.fl.availability import AvailabilityConfig, make_availability
 from repro.fl.runtime import Federation, FLRunConfig, validate_method
 from repro.fl.scheduler import RoundScheduler
 from repro.utils.checkpoint import load_checkpoint, read_manifest, save_checkpoint
@@ -76,7 +76,10 @@ class AsyncConfig:
 
     buffer_size: int = 0  # uploads per server update; 0 = K'
     concurrency: int = 0  # clients kept in flight; 0 = K'
-    availability: AvailabilityConfig = field(default_factory=AvailabilityConfig)
+    # AvailabilityConfig (seeded on/off + speed model) or
+    # TraceAvailabilityConfig (replay-from-file; DESIGN.md §10) — resolved
+    # by repro.fl.availability.make_availability
+    availability: Any = field(default_factory=AvailabilityConfig)
 
 
 class AsyncFederation(Federation):
@@ -105,10 +108,14 @@ class AsyncFederation(Federation):
         self.concurrency = acfg.concurrency or self.kprime
         if self.buffer_size < 1:
             raise ValueError(f"buffer_size must be >= 1, got {self.buffer_size}")
-        self.availability = ClientAvailability(
+        self.availability = make_availability(
             acfg.availability, run_cfg.n_clients, run_cfg.seed
         )
-        self.scheduler = RoundScheduler(self.availability, self.concurrency)
+        # multi-pod mesh (DESIGN.md §11): micro-cohorts map onto the mesh's
+        # pods and each pod drains its own completion stream; 1 elsewhere
+        self.n_pods = getattr(self.engine, "n_pods", 1)
+        self.scheduler = RoundScheduler(self.availability, self.concurrency,
+                                        n_pods=self.n_pods)
         # in-flight results, computed at dispatch (the simulator needs no
         # delayed compute — only delayed *delivery*): client -> slices
         self._pending: Dict[int, dict] = {}
@@ -171,6 +178,17 @@ class AsyncFederation(Federation):
         # uninterrupted run applied those flushes before dispatching
         # again, so drain first (a no-op otherwise: _deliver drains)
         self._drain()
+        # likewise, a checkpoint written by a flush inside the per-pod
+        # same-timestamp drain below still holds the OTHER pods'
+        # completions due at the current sim_time; the uninterrupted run
+        # delivered every same-time pod cohort before drawing from the
+        # participation RNG again, so deliver them before dispatching
+        # (a no-op outside resume: dispatched durations are positive, so
+        # completions are always strictly in the future here)
+        while self.scheduler.next_completion_time() is not None and \
+                self.scheduler.next_completion_time() <= self.sim_time:
+            _, _, done = self.scheduler.pop_pod_completions()
+            self._deliver(done)
         if self._round >= self.cfg.rounds:
             return  # the drain finished the budget; don't dispatch past it
         ids = self.scheduler.dispatch_group(self.sim_time, self.rng)
@@ -194,8 +212,15 @@ class AsyncFederation(Federation):
             if tn is not None and tn < tc:
                 self.sim_time = tn
                 return
-        self.sim_time, done = self.scheduler.pop_completions()
-        self._deliver(done)
+        # deliver EVERY per-pod micro-cohort at the next completion time
+        # before returning (each pod drains its own stream, DESIGN.md §11;
+        # draining the whole timestamp before the next dispatch_group is
+        # what keeps the degenerate config's RNG consumption identical to
+        # the synchronous sampler's round pattern)
+        self.sim_time = tc
+        while self.scheduler.next_completion_time() == self.sim_time:
+            _, _, done = self.scheduler.pop_pod_completions()
+            self._deliver(done)
 
     def _dispatch(self, ids: np.ndarray):
         """Run the micro-cohort's client phase with the CURRENT broadcast.
@@ -211,6 +236,15 @@ class AsyncFederation(Federation):
         new_states, uploads, metrics = self.programs.client_fn(len(ids))(
             self.client_states, self.broadcast, jids, batches
         )
+        # host copies on the sharded backends only: pending results outlive
+        # this micro-cohort's engine mesh, and a later delivery may feed
+        # them to a DIFFERENT cohort's program (different mesh device set)
+        # — a slice of a multi-device-committed array would conflict at
+        # that jit boundary.  Mirrors what the checkpoint path stores;
+        # bitwise-exact round trip.  VmapBackend has no mesh, so its
+        # results stay on device.
+        if self.cfg.backend != "vmap":
+            new_states, uploads = jax.device_get((new_states, uploads))
         losses = np.asarray(metrics["loss"], np.float32)
         for j, i in enumerate(ids.tolist()):
             self._pending[i] = {
@@ -335,7 +369,8 @@ class AsyncFederation(Federation):
         would silently break the bitwise-continuation contract); the
         availability model travels in the base ``_run_fingerprint``."""
         return {"buffer_size": self.buffer_size,
-                "concurrency": self.concurrency}
+                "concurrency": self.concurrency,
+                "n_pods": self.n_pods}
 
     def save(self, ckpt_dir) -> str:
         return save_checkpoint(

@@ -1,11 +1,22 @@
-"""Seeded host-side client-heterogeneity model (DESIGN.md §10).
+"""Host-side client-heterogeneity models (DESIGN.md §10).
 
 Production federations are dominated by stragglers and intermittent
 availability, not FLOPs: clients differ in compute speed by orders of
 magnitude and are online only a fraction of the time.  This module gives
-the simulator a *clock* for that world — per-client round durations
-(lognormal across clients) and on/off availability traces — without
-touching the federation's numerics:
+the simulator a *clock* for that world — per-client round durations and
+on/off availability traces — without touching the federation's numerics.
+Two implementations of one interface (``duration`` / ``is_online`` /
+``next_online`` / ``sync_round_duration``, plus ``.cfg``/``.n`` for the
+checkpoint fingerprint):
+
+- ``ClientAvailability`` — the seeded generative model (lognormal speeds,
+  exponential on/off renewal process);
+- ``TraceAvailability`` — replay-from-file: real-world device traces
+  (JSON on/off windows + per-client durations) replayed periodically,
+  content-digest-stamped so checkpoint resume rejects a changed trace.
+
+``make_availability`` resolves a config of either flavour; the generative
+model's determinism story:
 
 - **Deterministic per seed, independent streams.**  Every draw comes from
   RandomStates keyed by ``(seed, purpose[, client])``, never from the
@@ -32,7 +43,10 @@ that asymmetry is exactly what the ``async-engine`` bench measures.
 from __future__ import annotations
 
 import bisect
-from dataclasses import dataclass
+import hashlib
+import json
+from dataclasses import dataclass, replace
+from pathlib import Path
 
 import numpy as np
 
@@ -59,7 +73,40 @@ class AvailabilityConfig:
     mean_on: float = 10.0  # mean online-stretch length (exponential)
 
 
-class ClientAvailability:
+class AvailabilityModel:
+    """Shared interface + the bulk-synchronous cost model.
+
+    Subclasses set ``cfg`` (a frozen dataclass — ``dataclasses.asdict`` of
+    it is stamped into checkpoint fingerprints by the drivers) and ``n``,
+    and implement ``duration`` / ``is_online`` / ``next_online``.
+    """
+
+    cfg = None
+    n = 0
+
+    def duration(self, client: int) -> float:
+        raise NotImplementedError
+
+    def is_online(self, client: int, t: float) -> bool:
+        raise NotImplementedError
+
+    def next_online(self, client: int, t: float) -> float:
+        raise NotImplementedError
+
+    def sync_round_duration(self, client_ids, t: float) -> float:
+        """Simulated wall-clock of one bulk-synchronous round from time t.
+
+        The synchronous server samples availability-obliviously and waits
+        for the full cohort: the round ends when the LAST sampled client
+        has come online and finished, so the cost is
+        max_i(next_online_i(t) + duration_i) - t.
+        """
+        ends = [self.next_online(int(i), t) + self.duration(int(i))
+                for i in np.asarray(client_ids).tolist()]
+        return max(ends) - t
+
+
+class ClientAvailability(AvailabilityModel):
     """Per-client speeds + on/off traces, deterministic per (cfg, K, seed)."""
 
     def __init__(self, cfg: AvailabilityConfig, n_clients: int, seed: int):
@@ -143,16 +190,122 @@ class ClientAvailability:
         j = bisect.bisect_right(bounds, t)
         return float(bounds[j])
 
-    # -- bulk-synchronous cost model --------------------------------------
 
-    def sync_round_duration(self, client_ids, t: float) -> float:
-        """Simulated wall-clock of one bulk-synchronous round from time t.
+# ---------------------------------------------------------------------------
+# Trace-driven availability: replay real-world device traces from a file
+# ---------------------------------------------------------------------------
 
-        The synchronous server samples availability-obliviously and waits
-        for the full cohort: the round ends when the LAST sampled client
-        has come online and finished, so the cost is
-        max_i(next_online_i(t) + duration_i) - t.
-        """
-        ends = [self.next_online(int(i), t) + self.duration(int(i))
-                for i in np.asarray(client_ids).tolist()]
-        return max(ends) - t
+
+@dataclass(frozen=True)
+class TraceAvailabilityConfig:
+    """Replay-from-file availability (``--availability trace:<path>``).
+
+    ``digest`` is the sha256 of the trace file, filled by
+    ``TraceAvailability`` at load time: ``dataclasses.asdict(model.cfg)``
+    lands in the checkpoint fingerprint (repro.fl.runtime), so resuming
+    against a moved OR edited trace file is rejected — the replayed clock
+    would not be a bitwise continuation.
+    """
+
+    path: str
+    digest: str = ""
+
+
+class TraceAvailability(AvailabilityModel):
+    """Replays on/off windows and per-client durations from a JSON file.
+
+    File format (see examples/traces/ for a bundled sample)::
+
+        {"period": 20.0,                    # optional; default max end
+         "clients": [
+           {"duration": 1.0,                # simulated round duration
+            "online": [[0.0, 8.0], [12.0, 20.0]]},   # half-open [s, e)
+           ...]}
+
+    Windows must be sorted, non-overlapping and within [0, period]; the
+    pattern repeats every ``period`` simulated seconds, so simulations
+    longer than the recorded trace keep replaying it (the standard
+    device-trace protocol).  A federation larger than the trace maps
+    client i onto recorded trace ``i % len(clients)``.  No RNG anywhere:
+    the model is a pure function of the file, which is why the content
+    digest alone fingerprints it.
+    """
+
+    def __init__(self, cfg: TraceAvailabilityConfig, n_clients: int,
+                 seed: int = 0):
+        del seed  # replay is deterministic; kept for interface symmetry
+        raw = Path(cfg.path).read_bytes()
+        digest = hashlib.sha256(raw).hexdigest()
+        if cfg.digest and cfg.digest != digest:
+            raise ValueError(
+                f"trace file {cfg.path} has digest {digest[:12]}..., but the "
+                f"config pins {cfg.digest[:12]}... - the trace changed on disk"
+            )
+        self.cfg = replace(cfg, digest=digest)
+        self.n = n_clients
+        data = json.loads(raw.decode("utf-8"))
+        clients = data.get("clients")
+        if not clients:
+            raise ValueError(f"trace file {cfg.path} has no 'clients' entries")
+        ends = [w[1] for c in clients for w in c.get("online", [])]
+        self.period = float(data.get("period") or (max(ends) if ends else 0.0))
+        if self.period <= 0.0:
+            raise ValueError(
+                f"trace file {cfg.path} needs a positive period (explicit "
+                "'period' or at least one online window)")
+        self._durations = []
+        self._windows = []
+        for j, c in enumerate(clients):
+            dur = float(c.get("duration", 1.0))
+            if dur <= 0.0:
+                raise ValueError(f"trace client {j}: non-positive duration {dur}")
+            wins = [(float(s), float(e)) for s, e in c.get("online", [])]
+            prev_end = 0.0
+            for s, e in wins:
+                if not (0.0 <= s < e <= self.period) or s < prev_end:
+                    raise ValueError(
+                        f"trace client {j}: windows must be sorted, "
+                        f"non-overlapping, within [0, {self.period}] "
+                        f"(offending window [{s}, {e}))")
+                prev_end = e
+            self._durations.append(dur)
+            self._windows.append(wins)
+
+    def _client(self, client: int) -> int:
+        return client % len(self._windows)
+
+    def duration(self, client: int) -> float:
+        return self._durations[self._client(client)]
+
+    def is_online(self, client: int, t: float) -> bool:
+        tt = t % self.period
+        for s, e in self._windows[self._client(client)]:
+            if s <= tt < e:
+                return True
+        return False
+
+    def next_online(self, client: int, t: float) -> float:
+        """Earliest time >= t at which ``client`` is online (replay wraps:
+        a client with no windows never comes online — rejected upfront by
+        the scheduler's deadlock error rather than looping forever)."""
+        wins = self._windows[self._client(client)]
+        if not wins:
+            return float("inf")
+        cycle, tt = divmod(t, self.period)
+        for s, e in wins:
+            if tt < e:
+                return t if s <= tt else cycle * self.period + s
+        # past the last window: first window of the next cycle
+        return (cycle + 1) * self.period + wins[0][0]
+
+
+def make_availability(cfg, n_clients: int, seed: int) -> AvailabilityModel:
+    """Resolve an availability config of either flavour to its model."""
+    if isinstance(cfg, TraceAvailabilityConfig):
+        return TraceAvailability(cfg, n_clients, seed)
+    if isinstance(cfg, AvailabilityConfig):
+        return ClientAvailability(cfg, n_clients, seed)
+    raise TypeError(
+        f"availability config must be AvailabilityConfig or "
+        f"TraceAvailabilityConfig, got {type(cfg).__name__}"
+    )

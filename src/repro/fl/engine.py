@@ -1,25 +1,39 @@
-"""Backend-pluggable federation engine (DESIGN.md §3).
+"""Backend-pluggable federation engine (DESIGN.md §3/§11).
 
 The round logic in ``repro.fl.runtime`` is backend-agnostic: a
 ``FederationEngine`` decides *where* the per-client work of one round runs.
-Two interchangeable backends ship today:
+Three interchangeable backends ship today:
 
   VmapBackend      single host, single device: the K' participating clients
                    are one ``jax.vmap`` over the stacked client axis (the
                    seed behaviour, and the reference semantics).
-  ShardMapBackend  multi-device: the participating-client axis is sharded
-                   across a 1-D ``jax.sharding.Mesh`` ("clients" axis) and
-                   each device vmaps its local slice inside
-                   ``jax.experimental.shard_map``.  Uploads/metrics/accs
-                   come back as global arrays sharded on the client axis, so
-                   the server mean over clients (Eq. 13) compiles to a
-                   per-shard partial sum + cross-shard psum — the
-                   round-boundary all-reduce of DESIGN.md §3.
+  MeshBackend      the general mesh engine (DESIGN.md §11): shard_maps the
+                   participating-client axis over the mesh's *client-role*
+                   axis (``pod`` on the production `(pod, data, model)`
+                   mesh, ``clients`` on the 1-D engine mesh) and each
+                   device vmaps its local client slice.  Within a pod the
+                   per-client phase replicates over `(data, model)` —
+                   except the §9 round-start update, whose flattened-N
+                   axis shards over ``model`` (per-shard partial
+                   reductions + cross-shard psum for the three Gompertz
+                   scalars; `repro.kernels.pfedsop_update`).  In specs
+                   come from the composed pspec helpers
+                   (`launch/sharding.py::client_stacked_pspecs`), so
+                   Megatron-eligible leaves of transformer-family state
+                   additionally live model-sharded at rest and are
+                   gathered transiently inside the body.
+  ShardMapBackend  the 1-D special case of MeshBackend kept under its own
+                   name: the client axis over a ``"clients"`` mesh — the
+                   §3 layout.
 
-Both backends run the *same* traced client function on the *same* stacked
-operands, so they are numerically equivalent on the same seed: identical on
-a 1-device mesh, and equal up to float-reduction order of the cross-shard
-aggregation on multi-device meshes (asserted in tests/test_engine.py).
+All backends run the *same* traced client function on the *same* stacked
+operands and return their outputs **fully replicated** (an explicit
+round-boundary all-gather inside the program), so downstream server
+aggregation (Eq. 13) compiles to the same mesh-shape-invariant program
+everywhere.  That replication is what upgrades backend parity from
+"equal up to cross-shard reduction order" to **bitwise** — asserted on a
+1-device mesh, a 4-way client mesh and a forced 8-device `(2,2,2)`
+multi-pod mesh (tests/test_engine.py, tests/test_multipod.py).
 
 The client function contract is the ``FLMethod`` interface documented in
 ``repro.core.baselines``; the engine only requires that it is traceable
@@ -27,7 +41,8 @@ The client function contract is the ``FLMethod`` interface documented in
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Protocol, runtime_checkable
+import contextlib
+from typing import Any, Callable, Optional, Protocol, Union, runtime_checkable
 
 import jax
 
@@ -35,9 +50,11 @@ try:  # moved out of jax.experimental in newer jax releases
     from jax import shard_map
 except ImportError:
     from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.mesh import make_client_mesh
+from repro.kernels.dispatch import model_shard_axis
+from repro.launch.mesh import MeshSpec, is_auto_clients, parse_mesh, resolve_mesh
 from repro.launch.sharding import client_stacked_pspecs
 
 Pytree = Any
@@ -84,6 +101,11 @@ class VmapBackend:
     """Single-host reference backend: one jax.vmap over the client axis."""
 
     name = "vmap"
+    n_pods = 1
+
+    def signature(self) -> str:
+        """Engine layout id (RoundPrograms cache key, DESIGN.md §11)."""
+        return "vmap"
 
     def client_phase(self, one_client, gathered_states, broadcast, batches):
         return jax.vmap(one_client, in_axes=(0, None, 0))(
@@ -127,41 +149,139 @@ def resolve_shards(kprime: int, n_devices: int, requested: int = 0) -> int:
     return 1
 
 
-class ShardMapBackend:
-    """Shards the participating-client axis across a 1-D device mesh.
+def resolve_client_split(kprime: int, spec: MeshSpec, strict: bool = True) -> bool:
+    """Whether a K'-cohort can shard over ``spec``'s client-role axis.
 
-    Each device runs ``jax.vmap`` over its K'/shards local clients inside
-    ``shard_map``; outputs stay sharded on the client axis so downstream
-    cross-client reductions (the server aggregation) become cross-shard
-    collectives instead of single-device loops.
+    Unlike the 1-D ``resolve_shards`` (which picks a dividing shard count),
+    a mesh's client-axis size is fixed by the spec, so a non-divisor K' has
+    no partial split: ``strict=True`` raises (a requested layout must never
+    be silently changed, §3); ``strict=False`` — the async driver's
+    micro-cohorts — falls back to an unsharded client axis (the cohort
+    replicates across pods; the §9 model-sharded update still applies).
+    Returns True when the client axis is used, False for the fallback.
+    """
+    size = spec.client_size
+    if spec.client_axis is None or size == 1:
+        return False
+    if kprime % size == 0:
+        return True
+    if strict:
+        raise ValueError(
+            f"mesh {spec.signature()}: client axis {spec.client_axis!r} of "
+            f"size {size} must divide the {kprime} participating clients per "
+            "round (no padding; see DESIGN.md §3/§11) — pick a dividing pod "
+            "count or adjust participation"
+        )
+    return False
+
+
+class MeshBackend:
+    """Mesh engine: client axis over the client-role axis of a MeshSpec.
+
+    Each device holding a client-axis coordinate runs ``jax.vmap`` over its
+    local clients inside ``shard_map``; the remaining mesh axes (``data``,
+    ``model``) replicate the per-client phase except where a kernel opts
+    into the model axis via the §9 dispatch context
+    (``repro.kernels.dispatch.model_shard_axis`` — the model-sharded
+    ``pfedsop_update`` layout, DESIGN.md §11).
+
+    Inputs may arrive model-sharded at rest: in-specs come from the
+    composed ``client_stacked_pspecs`` (client axis x Megatron param
+    rules), and the body transiently all-gathers any model-sharded leaf
+    before the per-client compute.  Outputs are returned fully replicated
+    (see module docstring — the bitwise-parity contract).
     """
 
-    name = "shard_map"
+    name = "mesh"
 
-    def __init__(self, kprime: int, shards: int = 0):
+    def __init__(self, kprime: int, spec: MeshSpec, strict: bool = True):
         self.kprime = kprime
-        self.shards = resolve_shards(kprime, len(jax.devices()), shards)
-        self.mesh = make_client_mesh(self.shards, axis_name=CLIENT_AXIS)
+        self.spec = spec
+        self.client_sharded = resolve_client_split(kprime, spec, strict)
+        self.mesh = resolve_mesh(spec)
+
+    @property
+    def client_shards(self) -> int:
+        return self.spec.client_size if self.client_sharded else 1
+
+    @property
+    def n_pods(self) -> int:
+        """Pods the async scheduler maps micro-cohorts onto (DESIGN.md
+        §11): the client-axis size of an explicit multi-pod mesh; 1
+        otherwise (the 1-D client mesh keeps global scheduling)."""
+        return (self.spec.client_size
+                if self.spec.client_axis == "pod" and self.client_sharded
+                else 1)
+
+    def signature(self) -> str:
+        """Engine layout id (RoundPrograms cache key, DESIGN.md §11)."""
+        sig = self.spec.signature()
+        return sig if self.client_sharded else sig + "|cohort-replicated"
+
+    def _in_specs(self, tree):
+        caxis = self.spec.client_axis if self.client_sharded else None
+        return client_stacked_pspecs(
+            tree, caxis, model_axis=self.spec.model_axis,
+            msize=self.spec.model_size,
+        )
+
+    def _gather_model(self, tree, specs):
+        """All-gather any model-sharded dims so the per-client compute sees
+        full leaves (transient: storage stays sharded, compute replicates
+        across the model axis — the §11 v1 semantics; the model axis does
+        real parallel work inside the §9 model-sharded update kernel)."""
+        maxis = self.spec.model_axis
+        if maxis is None or self.spec.model_size <= 1:
+            return tree
+
+        def gather(x, spec):
+            # spec dims after the leading client axis map to x's dims 1:
+            # inside the body the client axis is local (dim 0 retained)
+            for d, ax in enumerate(spec):
+                if d == 0:
+                    continue  # client axis handled by shard_map itself
+                if ax == maxis:
+                    x = jax.lax.all_gather(x, maxis, axis=d, tiled=True)
+            return x
+
+        return jax.tree.map(gather, tree, specs)
 
     def _sharded(self, fn, *in_trees, broadcast):
-        specs = tuple(client_stacked_pspecs(t, CLIENT_AXIS) for t in in_trees)
+        specs = tuple(self._in_specs(t) for t in in_trees)
+        caxis = self.spec.client_axis if self.client_sharded else None
+        out_spec = P(caxis) if caxis else P()
 
         def local(broadcast_, *local_trees):
+            local_trees = tuple(
+                self._gather_model(t, s) for t, s in zip(local_trees, specs)
+            )
             return jax.vmap(fn, in_axes=(0, None) + (0,) * (len(local_trees) - 1))(
                 local_trees[0], broadcast_, *local_trees[1:]
             )
 
         # check_rep=False: jax has no replication rule for pallas_call, so
         # the rep checker rejects the kernel update impl (DESIGN.md §9).
-        # Safe here — every out_spec is fully specified on the client axis,
-        # so the check would not tighten anything.
-        return shard_map(
-            local,
-            mesh=self.mesh,
-            in_specs=(P(),) + specs,
-            out_specs=P(CLIENT_AXIS),
-            check_rep=False,
-        )(broadcast, *in_trees)
+        # Safe here — outputs are re-constrained to replicated below, so
+        # the check would not tighten anything.
+        msize = self.spec.model_size
+        ctx = (model_shard_axis(self.spec.model_axis, msize)
+               if self.spec.model_axis is not None and msize > 1
+               else contextlib.nullcontext())
+        with ctx:
+            out = shard_map(
+                local,
+                mesh=self.mesh,
+                in_specs=(P(),) + specs,
+                out_specs=out_spec,
+                check_rep=False,
+            )(broadcast, *in_trees)
+        # round-boundary all-gather: outputs leave the engine fully
+        # replicated, so server aggregation compiles to the same
+        # mesh-shape-invariant program under every backend (the bitwise
+        # parity contract; DESIGN.md §11)
+        return jax.lax.with_sharding_constraint(
+            out, NamedSharding(self.mesh, P())
+        )
 
     def client_phase(self, one_client, gathered_states, broadcast, batches):
         return self._sharded(one_client, gathered_states, batches, broadcast=broadcast)
@@ -172,23 +292,82 @@ class ShardMapBackend:
     def describe(self):
         return {
             "backend": self.name,
+            "mesh": self.spec.signature(),
+            "shards": self.client_shards,
+            "n_pods": self.n_pods,
+            "model_shards": self.spec.model_size,
+            "devices": [str(d) for d in self.mesh.devices.flat],
+        }
+
+
+class ShardMapBackend(MeshBackend):
+    """1-D special case of ``MeshBackend``: the participating-client axis
+    over a ``"clients"`` mesh (DESIGN.md §3), shard count resolved from
+    (K', local devices) by ``resolve_shards``."""
+
+    name = "shard_map"
+
+    def __init__(self, kprime: int, shards: int = 0):
+        self.shards = resolve_shards(kprime, len(jax.devices()), shards)
+        super().__init__(kprime, MeshSpec.clients(self.shards, CLIENT_AXIS))
+
+    def describe(self):
+        return {
+            "backend": self.name,
             "shards": self.shards,
             "devices": [str(d) for d in self.mesh.devices.flat],
         }
 
 
-BACKENDS = ("vmap", "shard_map")
+BACKENDS = ("vmap", "shard_map", "mesh")
 
 
-def make_engine(backend: str, kprime: int, shards: int = 0) -> FederationEngine:
-    """Engine factory used by ``Federation`` (selected via FLRunConfig)."""
+def make_engine(backend: str, kprime: int, shards: int = 0,
+                mesh: Union[str, MeshSpec, None] = None,
+                strict: bool = True) -> FederationEngine:
+    """Engine factory used by ``Federation`` (selected via FLRunConfig).
+
+    ``mesh`` (a spec string for ``repro.launch.mesh.parse_mesh``, or a
+    ``MeshSpec``) selects the layout for ``backend="mesh"`` and is rejected
+    elsewhere — like ``shards``, a layout request must never be silently
+    ignored.  ``strict=False`` (the async driver's micro-cohorts) lets a
+    non-divisor cohort fall back instead of erroring (§3/§11).
+    """
     if backend == "vmap":
-        if shards:
+        if shards or mesh:
             raise ValueError(
-                "shards is only meaningful with backend='shard_map' "
-                f"(got shards={shards} with backend='vmap')"
+                "shards/mesh are only meaningful with backend='shard_map'/"
+                f"'mesh' (got shards={shards}, mesh={mesh!r} with "
+                "backend='vmap')"
             )
         return VmapBackend()
     if backend == "shard_map":
+        if mesh:
+            raise ValueError(
+                "backend='shard_map' is the 1-D client mesh; pass the mesh "
+                f"spec (got {mesh!r}) with backend='mesh' instead"
+            )
+        # async micro-cohorts (strict=False): an explicitly requested split
+        # that does not divide the cohort falls back to auto (largest
+        # divisor) instead of erroring
+        if not strict and shards and kprime % shards:
+            shards = 0
         return ShardMapBackend(kprime, shards)
+    if backend == "mesh":
+        if shards:
+            raise ValueError(
+                "backend='mesh' takes its client split from the mesh spec's "
+                f"client-role axis; shards={shards} is only meaningful with "
+                "backend='shard_map'"
+            )
+        if not mesh:
+            raise ValueError(
+                "backend='mesh' requires a mesh spec (FLRunConfig.mesh / "
+                "--mesh), e.g. 'pods:2x2x2'; see repro.launch.mesh.parse_mesh"
+            )
+        spec = parse_mesh(mesh) if isinstance(mesh, str) else mesh
+        if is_auto_clients(spec):
+            spec = MeshSpec.clients(
+                resolve_shards(kprime, len(jax.devices())), CLIENT_AXIS)
+        return MeshBackend(kprime, spec, strict=strict)
     raise ValueError(f"unknown FL backend {backend!r}; choose from {BACKENDS}")

@@ -110,6 +110,12 @@ class FLRunConfig:
     eval_every: int = 1
     backend: str = "vmap"  # one of repro.fl.engine.BACKENDS
     shards: int = 0  # shard_map only; 0 = auto (largest divisor of K')
+    # backend="mesh" only (DESIGN.md §11): mesh spec string for
+    # repro.launch.mesh.parse_mesh — "clients[:N]" | "host" | "pod:DxM" |
+    # "pods:PxDxM".  The client-role axis of the spec ("pod" on the
+    # production mesh) shards the participating-client cohort; rejected
+    # for other backends so a layout request is never silently ignored.
+    mesh: str = ""
     # Round-start update impl override (repro.kernels.dispatch.UPDATE_IMPLS;
     # DESIGN.md §9).  "" = defer to the method's own config (e.g.
     # PFedSOPConfig.update_impl); a non-empty value is pushed into the
@@ -145,28 +151,35 @@ class RoundPrograms:
     (DESIGN.md §10, tests/test_async_federation.py).
 
     Engines (and therefore the client/eval programs, whose mesh is baked
-    in at trace time) are cached per cohort size; the aggregate/scatter
-    programs are single ``jax.jit`` objects that retrace per operand
-    shape.  The async scheduler dispatches in grouped cohorts, so the
-    cache stays bounded by the distinct cohort sizes actually seen.
+    in at trace time) are cached per ``(cohort size, mesh signature)``
+    (DESIGN.md §11) — the signature is the engine's resolved layout id
+    (``engine.signature()``), so a micro-cohort whose client split falls
+    back to a different layout gets its own program entry instead of
+    colliding with the full-cohort one.  The aggregate/scatter programs
+    are single ``jax.jit`` objects that retrace per operand shape.  The
+    async scheduler dispatches in grouped cohorts, so the cache stays
+    bounded by the distinct (cohort, layout) pairs actually seen.
 
-    ``strict_shards=False`` (the async driver) falls back to the largest
-    dividing shard count when an explicitly requested split does not
-    divide a micro-cohort; the synchronous driver keeps the strict §3
-    validation (a requested split must never be silently changed).
+    ``strict_shards=False`` (the async driver) falls back when an
+    explicitly requested split does not divide a micro-cohort — to the
+    largest dividing shard count on the 1-D client mesh, and to an
+    unsharded (cohort-replicated) client axis on a multi-pod mesh; the
+    synchronous driver keeps the strict §3 validation (a requested split
+    must never be silently changed).
     """
 
     def __init__(self, method, loss_fn, acc_fn, backend: str, shards: int = 0,
-                 strict_shards: bool = True):
+                 mesh: str = "", strict_shards: bool = True):
         self.method = method
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
         self.backend = backend
         self.shards = shards
+        self.mesh = mesh
         self.strict_shards = strict_shards
         self._engines: Dict[int, Any] = {}
-        self._client: Dict[int, Any] = {}
-        self._eval: Dict[int, Any] = {}
+        self._client: Dict[Any, Any] = {}
+        self._eval: Dict[Any, Any] = {}
         method_ = method
 
         def _aggregate(broadcast, uploads):
@@ -191,18 +204,21 @@ class RoundPrograms:
     def engine(self, cohort: int):
         eng = self._engines.get(cohort)
         if eng is None:
-            shards = self.shards
-            if (shards and self.backend == "shard_map" and cohort % shards
-                    and not self.strict_shards):
-                shards = 0  # micro-cohort fallback: auto (largest divisor)
-            eng = make_engine(self.backend, cohort, shards)
+            # micro-cohort split fallbacks live in make_engine(strict=False)
+            eng = make_engine(self.backend, cohort, self.shards,
+                              mesh=self.mesh, strict=self.strict_shards)
             self._engines[cohort] = eng
         return eng
+
+    def _key(self, cohort: int):
+        """(cohort size, mesh signature) program-cache key (DESIGN.md §11)."""
+        return (cohort, self.engine(cohort).signature())
 
     def client_fn(self, cohort: int):
         """(client_states, broadcast, client_ids (c,), batches) ->
         (new_states, uploads, metrics), gather fused into the program."""
-        fn = self._client.get(cohort)
+        key = self._key(cohort)
+        fn = self._client.get(key)
         if fn is None:
             engine = self.engine(cohort)
             method, loss_fn = self.method, self.loss_fn
@@ -215,12 +231,13 @@ class RoundPrograms:
                 return engine.client_phase(one_client, gathered, broadcast, batches)
 
             fn = jax.jit(run)
-            self._client[cohort] = fn
+            self._client[key] = fn
         return fn
 
     def eval_fn(self, cohort: int):
         """(states (c-stacked), broadcast, test_sets) -> accuracies (c,)."""
-        fn = self._eval.get(cohort)
+        key = self._key(cohort)
+        fn = self._eval.get(key)
         if fn is None:
             engine = self.engine(cohort)
             method, acc_fn = self.method, self.acc_fn
@@ -233,7 +250,7 @@ class RoundPrograms:
                 return engine.eval_phase(one_eval, states, broadcast, test_sets)
 
             fn = jax.jit(run)
-            self._eval[cohort] = fn
+            self._eval[key] = fn
         return fn
 
 
@@ -294,6 +311,7 @@ class Federation:
         self.T = run_cfg.local_iters or data.local_iters(run_cfg.batch)
         self.programs = RoundPrograms(method, loss_fn, acc_fn,
                                       run_cfg.backend, run_cfg.shards,
+                                      mesh=run_cfg.mesh,
                                       strict_shards=self._strict_shards)
         # built eagerly: validates backend/shards at construction (§3)
         self.engine = self.programs.engine(self.kprime)
@@ -392,8 +410,11 @@ class Federation:
         writer for the restored RNG/clock streams to continue bitwise:
         the sampling/data-shape knobs plus the availability model.
         ``rounds`` is excluded on purpose (extending the budget keeps the
-        common prefix bitwise), as are backend/shards, whose histories
-        are parity-tested bit-exact across settings (tests/test_engine.py).
+        common prefix bitwise), as are backend/shards/mesh, whose
+        histories are parity-tested bit-exact across settings
+        (tests/test_engine.py, tests/test_multipod.py; the async driver
+        separately fingerprints its resolved ``n_pods``, which changes
+        delivery granularity).
         """
         av = getattr(self, "availability", None)
         return {

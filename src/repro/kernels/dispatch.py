@@ -31,8 +31,10 @@ below) rather than growing a parallel resolve function.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import logging
+from typing import Optional, Tuple
 
 import jax
 
@@ -97,6 +99,39 @@ def resolve_impl(impl: str, kernel: str) -> str:
             knob, resolved, kernel, backend,
         )
     return resolved
+
+
+# ---------------------------------------------------------------------------
+# Model-shard context (DESIGN.md §11)
+#
+# When a mesh-aware federation engine traces the client phase inside a
+# shard_map whose mesh has a model-role axis, kernels that support a
+# model-sharded layout (pfedsop_update's flattened-N axis today) should
+# split their sweep over that axis — per-shard partial reductions plus a
+# cross-shard psum — instead of running replicated on every model shard.
+# The engine announces the axis with ``model_shard_axis`` around body
+# tracing; the §9 adapters read ``current_model_shard()`` host-side, so
+# the choice is baked into the trace like every other dispatch decision.
+# ---------------------------------------------------------------------------
+
+_MODEL_SHARD_STACK: list = []
+
+
+@contextlib.contextmanager
+def model_shard_axis(axis_name: str, n_shards: int):
+    """Declare that tracing happens inside a shard_map body whose mesh has
+    a model-role axis ``axis_name`` of size ``n_shards`` (engines only)."""
+    _MODEL_SHARD_STACK.append((axis_name, int(n_shards)))
+    try:
+        yield
+    finally:
+        _MODEL_SHARD_STACK.pop()
+
+
+def current_model_shard() -> Optional[Tuple[str, int]]:
+    """(axis_name, n_shards) of the innermost active model-shard context,
+    or None outside any mesh-engine body (the common case)."""
+    return _MODEL_SHARD_STACK[-1] if _MODEL_SHARD_STACK else None
 
 
 def resolve_update_impl(impl: str) -> str:

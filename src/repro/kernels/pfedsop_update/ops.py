@@ -4,8 +4,12 @@
 (any float dtype), pads to (rows, 128) tiles, runs the two-phase kernel and
 returns (x_new, beta).  ``pfedsop_update_batched`` is the same update with
 a leading participating-client axis — (C, N) operands, (C,) betas — backed
-by the (clients, tiles) grid kernels.  ``pfedsop_update_tree`` is the
-pytree convenience for one client.
+by the (clients, tiles) grid kernels.  ``pfedsop_update_batched_sharded``
+is the multi-pod layout (DESIGN.md §11): called inside a mesh-engine
+shard_map body, it sweeps only the local model-axis slice of the tile rows
+and combines the three Gompertz scalars with a cross-shard psum —
+bit-identical to the unsharded batched kernel.  ``pfedsop_update_tree`` is
+the pytree convenience for one client.
 
 Call sites: the production path is ``repro.core.pfedsop.personalize``,
 which dispatches here when ``PFedSOPConfig.update_impl`` resolves to the
@@ -22,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.pfedsop_update.kernel import (
+    _split_rows,
     reduce3_batched_pallas,
     reduce3_pallas,
     update_batched_pallas,
@@ -102,6 +107,81 @@ def pfedsop_update_batched(x, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,
     out3d = update_batched_pallas(x3d, di3d, dg3d, beta, eta1 * coeff,
                                   interpret=interpret)
     return out3d.reshape(x.shape[0], -1)[:, :n], beta
+
+
+def pfedsop_update_batched_sharded(x, delta_i, delta_g, axis_name: str,
+                                   n_shards: int, eta1=0.01, rho=1.0, lam=1.0,
+                                   eps=1e-12, interpret: bool = False):
+    """Model-sharded batched update: the flattened-N axis over a mesh axis.
+
+    Runs INSIDE a shard_map body whose mesh carries a model-role axis
+    ``axis_name`` of size ``n_shards`` (DESIGN.md §11); operands are the
+    same replicated (C, N) buffers as ``pfedsop_update_batched``.  Each
+    shard sweeps only its contiguous run of tile rows:
+
+      1. slice   — tiles are assigned to shards at the UNSHARDED kernel's
+                   tile granularity (``_split_rows(M, 512)`` rows per
+                   tile), zero-padding the tile count up to a multiple of
+                   ``n_shards``; shard s takes tiles [s*Tl, (s+1)*Tl).
+      2. reduce  — the (clients, local tiles) grid kernel emits per-tile
+                   partials for the three Gompertz scalars (<d_i,d_g>,
+                   ||d_i||^2, ||d_g||^2 — Eqs. 10-13); each shard scatters
+                   them into its tile range of a zero (C, T, 3) buffer and
+                   a cross-shard **psum** over ``axis_name`` reconstructs
+                   the full per-tile partial array exactly (disjoint
+                   supports: x + 0.0 is exact).
+      3. scalars — beta (Gompertz, Eq. 14) and the Sherman-Morrison
+                   coefficient from the summed partials, identically on
+                   every shard (replicated scalars).
+      4. update  — each shard updates its own tile slice and an all_gather
+                   over ``axis_name`` reassembles (C, N).
+
+    Bitwise contract: because the tile decomposition, the per-tile partial
+    values and the tile-axis summation order all match the unsharded
+    batched kernel, the result is bit-identical to
+    ``pfedsop_update_batched`` on the same operands — the anchor of the
+    §11 degenerate-parity guarantee (vmap == 1-D shard_map == multi-pod,
+    tests/test_multipod.py).  A psum of per-SHARD sums would be cheaper by
+    a few bytes but would re-associate the float reduction and break that
+    contract.
+    """
+    lax = jax.lax
+
+    if delta_g.ndim == 1:
+        delta_g = delta_g[None]
+    di3d, n = _pad3d(delta_i)
+    dg3d, _ = _pad3d(delta_g)
+    x3d, _ = _pad3d(x)
+    c, m, _lanes = x3d.shape
+
+    # tile layout of the UNSHARDED kernel (the bitwise reference); the
+    # shared (1, M, 128) broadcast delta slices the same way per shard
+    rows = _split_rows(m, 512)
+    t = m // rows  # total tiles
+    t_loc = -(-t // n_shards)  # tiles per shard (ceil)
+    m_pad = t_loc * n_shards * rows
+    padrows = lambda a: jnp.pad(a, ((0, 0), (0, m_pad - m), (0, 0)))
+    idx = lax.axis_index(axis_name)
+    sl = lambda a: lax.dynamic_slice_in_dim(padrows(a), idx * t_loc * rows,
+                                            t_loc * rows, axis=1)
+    di_l, dg_l, x_l = sl(di3d), sl(dg3d), sl(x3d)
+
+    # per-tile partials on the local tiles, at the reference tile size
+    part_l = reduce3_batched_pallas(di_l, dg_l, block_rows=rows,
+                                    interpret=interpret)  # (C, t_loc, 3)
+    full = jnp.zeros((c, t_loc * n_shards, 3), jnp.float32)
+    full = lax.dynamic_update_slice_in_dim(full, part_l, idx * t_loc, axis=1)
+    partials = lax.psum(full, axis_name)[:, :t, :]  # exact reconstruction
+    sums = jnp.sum(partials, axis=1)  # (C, 3) — same order as unsharded
+    dot, nl2, ng2 = sums[:, 0], sums[:, 1], sums[:, 2]
+
+    beta = gompertz_beta(dot, nl2, ng2, lam, eps)  # (C,) — replicated
+    coeff = _coeff_from_sums(dot, nl2, ng2, beta, rho)
+
+    out_l = update_batched_pallas(x_l, di_l, dg_l, beta, eta1 * coeff,
+                                  block_rows=rows, interpret=interpret)
+    out = lax.all_gather(out_l, axis_name, axis=1, tiled=True)  # (C, m_pad, 128)
+    return out[:, :m, :].reshape(x.shape[0], -1)[:, :n], beta
 
 
 def pfedsop_update_tree(params, delta_i, delta_g, eta1=0.01, rho=1.0, lam=1.0,

@@ -186,15 +186,34 @@ def batch_pspecs(batch_tree, dsize: int, batch_axis_index: int = 0,
     return jax.tree_util.tree_map_with_path(rule, batch_tree)
 
 
-def client_stacked_pspecs(tree, axis_name: str = "clients"):
+def client_stacked_pspecs(tree, axis_name: Optional[str] = "clients",
+                          model_axis: Optional[str] = None, msize: int = 1):
     """Full-rank specs sharding the leading stacked-client axis of every leaf.
 
     The FL engine stacks per-client state/batch pytrees on a leading K'
     axis (DESIGN.md §3); this returns ``P(axis_name, None, ...)`` per leaf
     for use as shard_map in/out specs — the ``replicated`` rule with the
     client axis sharded.
+
+    ``model_axis``/``msize`` compose the per-leaf ``_param_rule`` on top
+    (DESIGN.md §11): each client's slice additionally shards its
+    Megatron-eligible dims over the mesh's model axis within a pod —
+    ``P(axis_name, ..., model_axis, ...)``.  Leaves whose names match no
+    rule (or whose dims are not divisible by ``msize``) stay replicated
+    beyond the client axis, so arbitrary method state (the CNN federation)
+    composes to exactly the plain client-stacked layout.  The param rules
+    emit the literal axis name ``"model"``, so a composing mesh must name
+    its model-role axis ``"model"`` (all shipped MeshSpecs do).
     """
-    return replicated(tree, client=True, client_axis=axis_name)
+    if model_axis is None or msize <= 1:
+        return replicated(tree, client=True, client_axis=axis_name)
+    if model_axis != "model":
+        raise ValueError(
+            f"model-axis composition requires the mesh's model-role axis to "
+            f"be named 'model' (got {model_axis!r}); the name-based param "
+            "rules emit the literal axis name (DESIGN.md §5)"
+        )
+    return param_pspecs(tree, msize, client=True, client_axis=axis_name)
 
 
 def replicated(tree, client: bool = False, client_axis: Optional[str] = None):
