@@ -1,0 +1,91 @@
+"""Bench-ledger regression gate for the perf trajectory (ISSUE 7).
+
+Compares a freshly emitted ``experiments/bench/BENCH_<suite>.json`` against
+the committed trajectory under ``benchmarks/ledger/`` and fails when any
+``rounds_per_sec`` entry drops below ``--min-ratio`` (default 0.3) of the
+ledger value.  The threshold is deliberately loose: CI boxes are noisy and
+the gate exists to catch order-of-magnitude regressions (an accidental
+de-jit, a cache that stopped caching, a gather gone quadratic), not
+percent-level drift.  Entries present in only one file are reported but
+never fail the gate — the sweep grid may grow.
+
+  PYTHONPATH=src python -m benchmarks.run --only cohort-store ...
+  python benchmarks/check_ledger.py cohort-store [--min-ratio 0.3]
+
+Exit 0 on pass, 1 on regression, 2 when either file is missing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+LEDGER = REPO / "benchmarks" / "ledger"
+FRESH = REPO / "experiments" / "bench"
+
+
+def _throughputs(payload: dict, prefix=()) -> dict:
+    """Flatten metrics to {dotted.path: rounds_per_sec}."""
+    out = {}
+    node = payload.get("metrics", payload)
+    stack = [(prefix, node)]
+    while stack:
+        path, cur = stack.pop()
+        if not isinstance(cur, dict):
+            continue
+        for key, val in cur.items():
+            if key == "rounds_per_sec" and isinstance(val, (int, float)):
+                out[".".join(path)] = float(val)
+            elif isinstance(val, dict):
+                stack.append((path + (str(key),), val))
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("suite", help="suite name, e.g. cohort-store")
+    ap.add_argument("--min-ratio", type=float, default=0.3,
+                    help="fail when fresh rounds/sec < min_ratio * ledger")
+    ap.add_argument("--fresh", default="",
+                    help="override the fresh BENCH json path")
+    args = ap.parse_args()
+
+    ledger_path = LEDGER / f"BENCH_{args.suite}.json"
+    fresh_path = Path(args.fresh) if args.fresh else (
+        FRESH / f"BENCH_{args.suite}.json")
+    for p, what in [(ledger_path, "committed ledger"), (fresh_path, "fresh run")]:
+        if not p.exists():
+            print(f"check_ledger: missing {what}: {p}", file=sys.stderr)
+            return 2
+
+    ledger = _throughputs(json.loads(ledger_path.read_text()))
+    fresh = _throughputs(json.loads(fresh_path.read_text()))
+    failures = []
+    for key in sorted(set(ledger) | set(fresh)):
+        if key not in ledger:
+            print(f"  new entry (no ledger baseline): {key} "
+                  f"{fresh[key]:.3f} r/s")
+            continue
+        if key not in fresh:
+            print(f"  ledger entry absent from fresh run: {key}")
+            continue
+        ratio = fresh[key] / ledger[key] if ledger[key] else float("inf")
+        status = "OK" if ratio >= args.min_ratio else "REGRESSION"
+        print(f"  {status:>10}  {key}: {fresh[key]:.3f} r/s "
+              f"(ledger {ledger[key]:.3f}, ratio {ratio:.2f})")
+        if ratio < args.min_ratio:
+            failures.append(key)
+    if failures:
+        print(f"check_ledger: {len(failures)} entries below "
+              f"{args.min_ratio}x the committed trajectory: {failures}",
+              file=sys.stderr)
+        return 1
+    print(f"check_ledger: {args.suite} within {args.min_ratio}x of ledger "
+          f"({len(ledger)} baseline entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

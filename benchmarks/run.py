@@ -33,6 +33,11 @@ Mapping to the paper (Sen & Mohan 2025):
            Asserts async reaches the target in less simulated time AND
            that the staleness-weighted pFedSOP path still matches the
            fused-kernel dispatch (--interpret / automatic off-TPU)
+  cohort-store  fleet-scale store sweep (DESIGN.md §12): rounds/sec and
+           host<->device bytes moved vs fleet size K per store kind
+           (device / host / mmap / LRU-cached host), K' fixed at 64,
+           K = 10^3..10^5, with a bitwise parity assertion against the
+           all-on-device baseline at the smallest K
   multipod-engine  mesh-engine shootout (DESIGN.md §11): rounds/sec and
            simulated time-to-target across {vmap, 1-D shard_map,
            multi-pod (2,2,2) mesh} x {sync, async}, asserting bitwise
@@ -536,6 +541,102 @@ def bench_multipod_engine(rounds, interpret=False):
     return out
 
 
+def bench_cohort_store(rounds):
+    """Fleet-scale cohort-store sweep (DESIGN.md §12): rounds/sec and
+    host<->device bytes moved vs fleet size K per store kind.
+
+    The store's claim is that K is a *throughput* knob, not a device-memory
+    limit: per-client state rests on host numpy (``host``) or disk-backed
+    memmap (``mmap``) and only the round's K' participants are gathered to
+    device.  The sweep holds K' fixed at 64 and scales K across
+    10^3..10^5 — device memory stays flat while at-rest bytes scale with
+    K.  At the smallest K every kind (plus an LRU-cached host store) runs
+    and the loss histories + final client states are asserted BITWISE
+    identical to the all-on-device baseline; the larger sizes run only the
+    kinds whose at-rest tier fits the CI budget (RAM at 10^4, disk at
+    10^5 — capped below the ISSUE's 10^6 upper bound, which the mmap
+    store reaches with the same command and more disk/time; the cap is
+    printed, not silent).
+    """
+    print("\n== cohort-store: rounds/sec + bytes moved vs fleet size ==")
+    from repro.fl import StoreConfig
+
+    # tiny CNN so at-rest state is ~KB/client and the 10^5 sweep fits CI
+    cfg = CFG.replace(name="fleet-cnn", cnn_channels=(4,), cnn_image_size=8,
+                      n_classes=4)
+    loss = lambda p, b: cnn.loss_fn(p, cfg, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, cfg, t["images"]))
+    params = cnn.init_params(jax.random.PRNGKey(0), cfg)
+    kprime, r = 64, max(3, rounds // 3)
+
+    def fleet_data(k, seed=0):
+        # shared tiny sample bank, 5 overlapping samples per client: the
+        # bench measures state movement, so per-client data stays O(1)
+        images, labels = make_class_conditional_images(512, cfg.n_classes,
+                                                       cfg.cnn_image_size,
+                                                       seed=seed)
+        parts = [np.arange((5 * i) % 500, (5 * i) % 500 + 5) for i in range(k)]
+        return FederatedData.from_partition(images, labels, parts, seed=seed)
+
+    def run_one(data, k, store):
+        run_cfg = FLRunConfig(n_clients=k, participation=kprime / k, rounds=r,
+                              batch=4, local_iters=1, seed=0, store=store)
+        fed = Federation(_build("pfedsop"), loss, acc, params, data, run_cfg)
+        hist = fed.run()
+        return fed, hist
+
+    plans = {
+        1_000: ["device", "host", "mmap", "host+cache"],
+        10_000: ["host", "host+cache"],
+        100_000: ["mmap"],
+    }
+    print("bench,cohort-store/cap,0,max_k=100000_of_issue_1e6 "
+          "(mmap reaches 1e6 with more disk/time)")
+    out = {"kprime": kprime, "rounds": r, "sizes": {}}
+    for k, kinds in plans.items():
+        data = fleet_data(k)
+        out["sizes"][k] = {}
+        baseline = None  # (hist, final states) of the device store
+        for tag in kinds:
+            store = (StoreConfig(kind="host", cache_clients=4 * kprime)
+                     if tag == "host+cache" else tag)
+            fed, h = run_one(data, k, store)
+            t = float(np.mean(h["round_time"][1:]))  # skip compile round
+            stats = fed.store.stats()
+            hits = stats["cache_hits"] + stats["cache_misses"]
+            row = {
+                "rounds_per_sec": 1.0 / max(t, 1e-9),
+                "h2d_bytes": stats["h2d_bytes"],
+                "d2h_bytes": stats["d2h_bytes"],
+                "at_rest_bytes": getattr(fed.store, "at_rest_bytes", 0),
+                "cache_hit_rate": stats["cache_hits"] / hits if hits else None,
+            }
+            out["sizes"][k][tag] = row
+            print(f"bench,cohort-store/{tag}/k{k},{t*1e6:.0f},"
+                  f"rounds_per_sec={row['rounds_per_sec']:.3f},"
+                  f"h2d_mb={stats['h2d_bytes']/1e6:.1f},"
+                  f"d2h_mb={stats['d2h_bytes']/1e6:.1f}")
+            # bitwise parity vs the all-on-device baseline (the §12
+            # contract), checked where the device store itself runs
+            final = jax.tree.leaves(jax.tree.map(np.asarray, fed.client_states))
+            if baseline is None:
+                baseline = (h, final)
+            else:
+                assert h["loss"] == baseline[0]["loss"], (
+                    f"{tag}/k{k}: loss history must be bitwise identical "
+                    "to the device store")
+                assert all(np.array_equal(a, b)
+                           for a, b in zip(baseline[1], final)), (
+                    f"{tag}/k{k}: final client states must be bitwise "
+                    "identical to the device store")
+    print(f"{'K':>8} {'store':>11} {'r/s':>7} {'h2d MB':>7} {'at-rest MB':>11}")
+    for k, row in out["sizes"].items():
+        for tag, m in row.items():
+            print(f"{k:>8} {tag:>11} {m['rounds_per_sec']:>7.2f} "
+                  f"{m['h2d_bytes']/1e6:>7.1f} {m['at_rest_bytes']/1e6:>11.1f}")
+    return out
+
+
 def bench_model_fwd():
     """Model-zoo forward throughput per kernel impl x config (DESIGN.md §9).
 
@@ -659,6 +760,7 @@ BENCHES = {
     "pfedsop-update": bench_pfedsop_update,
     "async-engine": bench_async_engine,
     "multipod-engine": bench_multipod_engine,
+    "cohort-store": bench_cohort_store,
     "model-fwd": bench_model_fwd,
     "roofline": bench_roofline,
 }

@@ -26,6 +26,12 @@ Examples:
   PYTHONPATH=src python examples/train_federated.py \
       --backend mesh --mesh pods:2x2x2
 
+  # fleet scale (DESIGN.md §12): client state at rest on host (or disk
+  # with --store mmap), gathered to device per round; LRU-cache the 50
+  # hottest clients' device rows
+  PYTHONPATH=src python examples/train_federated.py --clients 2000 \
+      --participation 0.01 --store host --cache-clients 50
+
   # checkpoint every 5 server updates and resume an interrupted run
   PYTHONPATH=src python examples/train_federated.py --mode async \
       --ckpt-every 5 --ckpt-dir experiments/ckpt/demo
@@ -59,6 +65,7 @@ from repro.fl import (
     AvailabilityConfig,
     Federation,
     FLRunConfig,
+    StoreConfig,
     TraceAvailabilityConfig,
     make_availability,
 )
@@ -157,6 +164,21 @@ def main():
                          "durations; see examples/traces/)")
     ap.add_argument("--mean-on", type=float, default=10.0,
                     help="mean online-stretch length (sim seconds)")
+    # -- cohort store (DESIGN.md §12) --------------------------------------
+    ap.add_argument("--store", choices=["device", "host", "mmap"],
+                    default="device",
+                    help="where per-client personalized state lives at rest: "
+                         "'device' = one stacked device array (the seed "
+                         "layout), 'host' = numpy in host RAM, 'mmap' = "
+                         "disk-backed memmap; host/mmap gather only each "
+                         "round's participants to device, so --clients is a "
+                         "throughput knob instead of a device-memory limit — "
+                         "bitwise identical results either way")
+    ap.add_argument("--cache-clients", type=int, default=0,
+                    help="host/mmap stores only: keep device rows of the N "
+                         "most recently sampled clients in an LRU cache, "
+                         "skipping their host->device copy on re-sampling "
+                         "(0 = no cache)")
     # -- checkpointing ----------------------------------------------------
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="checkpoint the full driver state every N applied "
@@ -186,6 +208,10 @@ def main():
     if args.backend == "mesh" and not args.mesh:
         ap.error("--backend mesh requires --mesh (e.g. 'pods:2x2x2'); see "
                  "repro.launch.mesh.parse_mesh for the grammar")
+    if args.cache_clients and args.store == "device":
+        ap.error("--cache-clients only applies to --store host/mmap (the "
+                 "device store keeps every client resident, so a device "
+                 "cache is meaningless), so it would be silently ignored")
 
     trace_path = None
     if args.availability.startswith("trace:"):
@@ -248,6 +274,7 @@ def main():
         update_impl=args.update_impl,
         ckpt_every=args.ckpt_every,
         async_cfg=async_cfg,
+        store=StoreConfig(kind=args.store, cache_clients=args.cache_clients),
     )
 
     out_dir = Path("experiments/fl")

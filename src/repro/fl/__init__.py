@@ -5,8 +5,11 @@
 simulation with FedBuff-style staleness-weighted buffered aggregation.
 Both share the jitted phase programs in ``repro.fl.runtime.RoundPrograms``
 and the engine backends (DESIGN.md §3; the multi-pod ``MeshBackend`` and
-its role-named mesh layer are DESIGN.md §11).  See README.md for the repo
-map.
+its role-named mesh layer are DESIGN.md §11).  Per-client personalized
+state lives in a ``repro.fl.cohort_store.CohortStore`` (DESIGN.md §12):
+at rest on device, host RAM, or disk-backed memmap, gathered to device
+only for a round's participants — fleet size is a throughput knob, not a
+device-memory limit.  See README.md for the repo map.
 """
 from repro.fl.async_ import AsyncConfig, AsyncFederation  # noqa: F401
 from repro.fl.availability import (  # noqa: F401
@@ -15,6 +18,15 @@ from repro.fl.availability import (  # noqa: F401
     TraceAvailability,
     TraceAvailabilityConfig,
     make_availability,
+)
+from repro.fl.cohort_store import (  # noqa: F401
+    STORE_KINDS,
+    CohortStore,
+    DeviceStore,
+    HostStore,
+    StoreConfig,
+    as_store_config,
+    make_store,
 )
 from repro.fl.engine import (  # noqa: F401
     BACKENDS,

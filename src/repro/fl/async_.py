@@ -55,7 +55,7 @@ import numpy as np
 from repro.fl.availability import AvailabilityConfig, make_availability
 from repro.fl.runtime import Federation, FLRunConfig, validate_method
 from repro.fl.scheduler import RoundScheduler
-from repro.utils.checkpoint import load_checkpoint, read_manifest, save_checkpoint
+from repro.utils.checkpoint import load_checkpoint, read_manifest
 
 Pytree = Any
 
@@ -232,19 +232,25 @@ class AsyncFederation(Federation):
         consumption pattern as the synchronous driver.
         """
         batches = self.data.sample_round_batches(self.rng, ids, self.T, self.cfg.batch)
-        jids = jnp.asarray(ids)
-        new_states, uploads, metrics = self.programs.client_fn(len(ids))(
-            self.client_states, self.broadcast, jids, batches
+        gathered = self.store.gather(
+            ids, self.programs.gather_shardings(len(ids), self._store_struct)
         )
-        # host copies on the sharded backends only: pending results outlive
-        # this micro-cohort's engine mesh, and a later delivery may feed
-        # them to a DIFFERENT cohort's program (different mesh device set)
-        # — a slice of a multi-device-committed array would conflict at
-        # that jit boundary.  Mirrors what the checkpoint path stores;
-        # bitwise-exact round trip.  VmapBackend has no mesh, so its
-        # results stay on device.
-        if self.cfg.backend != "vmap":
-            new_states, uploads = jax.device_get((new_states, uploads))
+        new_states, uploads, metrics = self.programs.client_fn(len(ids))(
+            gathered, self.broadcast, batches
+        )
+        # route in-flight results through the store's offload policy
+        # (DESIGN.md §12): a host/mmap store ALWAYS host-copies — buffered
+        # uploads must never pin device memory — and the device store
+        # host-copies on the sharded backends only, where pending results
+        # outlive this micro-cohort's engine mesh and a later delivery may
+        # feed them to a DIFFERENT cohort's program (different mesh device
+        # set) — a slice of a multi-device-committed array would conflict
+        # at that jit boundary.  Mirrors what the checkpoint path stores;
+        # bitwise-exact round trip.  VmapBackend has no mesh, so the
+        # device store keeps its results on device.
+        new_states, uploads = self.store.offload(
+            (new_states, uploads), force_host=self.cfg.backend != "vmap"
+        )
         losses = np.asarray(metrics["loss"], np.float32)
         for j, i in enumerate(ids.tolist()):
             self._pending[i] = {
@@ -270,9 +276,7 @@ class AsyncFederation(Federation):
         accs = np.asarray(accs, np.float64)
         self.best_acc[dn] = np.maximum(self.best_acc[dn], accs)
         self.participated[dn] = True
-        self.client_states = self.programs.scatter(
-            self.client_states, jnp.asarray(dn), stacked
-        )
+        self.store.scatter(dn, stacked)
         # append the WHOLE cohort before flushing: a checkpoint written by a
         # flush must see every delivered upload in the buffer (or already
         # aggregated) — flushing mid-append would let ckpt_every cut the
@@ -372,15 +376,12 @@ class AsyncFederation(Federation):
                 "concurrency": self.concurrency,
                 "n_pods": self.n_pods}
 
-    def save(self, ckpt_dir) -> str:
-        return save_checkpoint(
-            ckpt_dir, self._round, self._ckpt_tree(),
-            extra={"round": self._round, "sim_time": self.sim_time,
-                   "driver": "async", "n_pending": len(self._pending),
-                   "n_buffer": len(self._buffer),
-                   "run_cfg": self._run_fingerprint(),
-                   "async_cfg": self._acfg_fingerprint()},
-        )
+    def _ckpt_extra(self) -> dict:
+        extra = super()._ckpt_extra()
+        extra.update({"driver": "async", "n_pending": len(self._pending),
+                      "n_buffer": len(self._buffer),
+                      "async_cfg": self._acfg_fingerprint()})
+        return extra
 
     def _upload_struct(self):
         """Upload-pytree structure via eval_shape (no FLOPs, no RNG use):
@@ -423,6 +424,7 @@ class AsyncFederation(Federation):
         tmpl = self._ckpt_template(bool(ex["n_pending"]), bool(ex["n_buffer"]))
         tree, extra = load_checkpoint(ckpt_dir, tmpl, step=manifest["step"])
         self._restore_core(tree, extra)
+        self._load_store_shards(ckpt_dir, manifest["step"])
         self.scheduler.restore_state(tree["sched"])
         self._pending = {}
         if "pending" in tree:

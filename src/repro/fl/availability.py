@@ -93,6 +93,20 @@ class AvailabilityModel:
     def next_online(self, client: int, t: float) -> float:
         raise NotImplementedError
 
+    @property
+    def always_online(self) -> bool:
+        """True iff ``is_online`` is identically True (every client, all t).
+
+        An optimization contract, not a heuristic: the async scheduler's
+        candidate scan is O(K) python-loop per dispatch event, which at
+        fleet scale (K = 10^6) dominates the simulation.  A model that
+        returns True here lets the scheduler build the candidate set
+        vectorized (same ascending-id order, so the grouped ``rng.choice``
+        draw — and the whole downstream history — stays bitwise
+        identical).  Default False: correct for any model.
+        """
+        return False
+
     def sync_round_duration(self, client_ids, t: float) -> float:
         """Simulated wall-clock of one bulk-synchronous round from time t.
 
@@ -164,6 +178,10 @@ class ClientAvailability(AvailabilityModel):
             mean = self.cfg.mean_on if on_now else mean_off
             bounds.append(bounds[-1] + float(tr["rng"].exponential(mean)))
         return tr
+
+    @property
+    def always_online(self) -> bool:
+        return self._always_on
 
     def is_online(self, client: int, t: float) -> bool:
         """Online at time t?  Periods are half-open [start, end)."""

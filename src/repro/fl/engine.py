@@ -117,6 +117,11 @@ class VmapBackend:
             states, broadcast, test_sets
         )
 
+    def input_shardings(self, tree):
+        """No mesh placement: the cohort store's default single-device
+        ``device_put`` is already this backend's layout (DESIGN.md §12)."""
+        return None
+
     def describe(self):
         return {"backend": self.name, "shards": 1}
 
@@ -282,6 +287,18 @@ class MeshBackend:
         return jax.lax.with_sharding_constraint(
             out, NamedSharding(self.mesh, P())
         )
+
+    def input_shardings(self, tree):
+        """Per-leaf ``NamedSharding`` for a gathered client-stacked cohort
+        at this engine's at-rest layout (client axis x Megatron param
+        rules — the same ``_in_specs`` the phase programs consume).  The
+        host cohort store ``device_put``s each gathered leaf against
+        these, so the participants' rows land as per-pod (and per
+        model-shard) slices directly instead of a replicated cohort that
+        shard_map re-lays out (DESIGN.md §12).  ``tree`` only needs the
+        leaf names/ranks (a ShapeDtypeStruct probe works)."""
+        specs = self._in_specs(tree)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
 
     def client_phase(self, one_client, gathered_states, broadcast, batches):
         return self._sharded(one_client, gathered_states, batches, broadcast=broadcast)

@@ -7,9 +7,11 @@ method's ``client_round`` across them — ``jax.vmap`` on one device, or
 ``shard_map`` over a client-axis device mesh — uploads are aggregated by
 the method's ``server_update``, and the states are scattered back.
 
-The round is executed as four jitted *phase programs* (gather+client,
-eval, aggregate, scatter) built by ``RoundPrograms`` and shared between
-the synchronous driver here and the asynchronous driver
+The round is executed as jitted *phase programs* (client, eval,
+aggregate) built by ``RoundPrograms`` — the cohort gather/scatter around
+them belongs to the ``repro.fl.cohort_store`` store (DESIGN.md §12), so
+the same programs run whether the K-stack rests on device or on host —
+and shared between the synchronous driver here and the asynchronous driver
 (``repro.fl.async_``): because both drivers run literally the same
 compiled programs on the same operands, the async subsystem's
 sync-degenerate guarantee (DESIGN.md §10) is structural — bitwise, not
@@ -28,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
+from pathlib import Path
 from typing import Any, Callable, Dict
 
 import jax
@@ -36,6 +39,7 @@ import numpy as np
 
 from repro.core.baselines import FLMethod
 from repro.data.federated import FederatedData
+from repro.fl.cohort_store import make_store
 from repro.fl.engine import make_engine
 from repro.kernels.dispatch import resolve_update_impl
 from repro.utils.checkpoint import (
@@ -135,16 +139,26 @@ class FLRunConfig:
     # consumed by AsyncFederation (ignored by the synchronous driver).
     # Typed Any to keep runtime free of an async_ import cycle.
     async_cfg: Any = None
+    # Cohort store (DESIGN.md §12): where the (K, ...)-stacked client
+    # states live at rest — None/"device" (resident jnp stack, the seed
+    # behaviour), "host" (numpy at rest, participants gathered to device
+    # per round), "mmap" (disk-backed memmaps), or a full
+    # repro.fl.cohort_store.StoreConfig for the cache/threshold knobs.
+    # Streamed execution is bitwise identical to the device store
+    # (tests/test_cohort_store.py), so this is purely a capacity knob.
+    store: Any = None
 
 
 class RoundPrograms:
     """Jitted per-phase round programs, cached per cohort size.
 
-    One FL round factors into four phases — (1) gather + client phase,
-    (2) per-client eval, (3) server aggregation, (4) scatter-back — and
-    both federation drivers (synchronous ``Federation`` here, buffered-
-    asynchronous ``AsyncFederation`` in ``repro.fl.async_``) execute the
-    SAME compiled programs from this cache.  That sharing is the
+    One FL round factors into (1) the client phase over the gathered
+    cohort, (2) per-client eval, (3) server aggregation — the cohort
+    gather before (1) and the scatter-back after (3) live in the
+    ``CohortStore`` (DESIGN.md §12) — and both federation drivers
+    (synchronous ``Federation`` here, buffered-asynchronous
+    ``AsyncFederation`` in ``repro.fl.async_``) execute the SAME compiled
+    programs from this cache.  That sharing is the
     correctness anchor of the async subsystem: in its degenerate
     configuration the async driver feeds identical operands to identical
     programs, so its history matches the synchronous one bitwise
@@ -155,8 +169,8 @@ class RoundPrograms:
     (DESIGN.md §11) — the signature is the engine's resolved layout id
     (``engine.signature()``), so a micro-cohort whose client split falls
     back to a different layout gets its own program entry instead of
-    colliding with the full-cohort one.  The aggregate/scatter programs
-    are single ``jax.jit`` objects that retrace per operand shape.  The
+    colliding with the full-cohort one.  The aggregate programs are
+    single ``jax.jit`` objects that retrace per operand shape.  The
     async scheduler dispatches in grouped cohorts, so the cache stays
     bounded by the distinct (cohort, layout) pairs actually seen.
 
@@ -180,6 +194,7 @@ class RoundPrograms:
         self._engines: Dict[int, Any] = {}
         self._client: Dict[Any, Any] = {}
         self._eval: Dict[Any, Any] = {}
+        self._shardings: Dict[Any, Any] = {}
         method_ = method
 
         def _aggregate(broadcast, uploads):
@@ -188,14 +203,8 @@ class RoundPrograms:
         def _aggregate_stale(broadcast, uploads, staleness):
             return method_.server_update_stale(broadcast, uploads, staleness)
 
-        def _scatter(full, client_ids, new):
-            return jax.tree.map(
-                lambda f, n: f.at[client_ids].set(n), full, new
-            )
-
         self.aggregate = jax.jit(_aggregate)
         self.aggregate_stale = jax.jit(_aggregate_stale)
-        self.scatter = jax.jit(_scatter)
 
     def seen_cohorts(self):
         """Cohort sizes an engine was actually instantiated for (sorted)."""
@@ -215,8 +224,11 @@ class RoundPrograms:
         return (cohort, self.engine(cohort).signature())
 
     def client_fn(self, cohort: int):
-        """(client_states, broadcast, client_ids (c,), batches) ->
-        (new_states, uploads, metrics), gather fused into the program."""
+        """(gathered_states (c-stacked), broadcast, batches) ->
+        (new_states, uploads, metrics).  The cohort gather happens in the
+        CohortStore before this program runs (DESIGN.md §12) — a pure
+        data movement, so the program sees bitwise the same operands the
+        previous fused ``x[client_ids]`` gather produced."""
         key = self._key(cohort)
         fn = self._client.get(key)
         if fn is None:
@@ -226,13 +238,26 @@ class RoundPrograms:
             def one_client(state, broadcast, batch_seq):
                 return method.client_round(loss_fn, state, broadcast, batch_seq)
 
-            def run(client_states, broadcast, client_ids, batches):
-                gathered = jax.tree.map(lambda x: x[client_ids], client_states)
-                return engine.client_phase(one_client, gathered, broadcast, batches)
+            def run(gathered_states, broadcast, batches):
+                return engine.client_phase(one_client, gathered_states,
+                                           broadcast, batches)
 
             fn = jax.jit(run)
             self._client[key] = fn
         return fn
+
+    def gather_shardings(self, cohort: int, stacked_struct):
+        """Engine input shardings for a gathered cohort tree (cached per
+        program key): ``NamedSharding`` per leaf for the mesh backends —
+        the host store device_puts against them so a multi-pod mesh
+        receives per-pod slices directly (DESIGN.md §12) — or None for
+        engines without a mesh placement (vmap)."""
+        key = self._key(cohort)
+        if key not in self._shardings:
+            eng = self.engine(cohort)
+            fn = getattr(eng, "input_shardings", None)
+            self._shardings[key] = None if fn is None else fn(stacked_struct)
+        return self._shardings[key]
 
     def eval_fn(self, cohort: int):
         """(states (c-stacked), broadcast, test_sets) -> accuracies (c,)."""
@@ -317,11 +342,14 @@ class Federation:
         self.engine = self.programs.engine(self.kprime)
 
         # same init for every client (paper: "same initialization for all
-        # methods"); states stacked on a leading K axis
+        # methods"); states stacked on a leading K axis, living at rest in
+        # the cohort store (device-resident by default; host/mmap for
+        # fleet-scale K — DESIGN.md §12)
         proto = method.init_client(init_params)
-        self.client_states = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (k,) + jnp.shape(x)), proto
-        )
+        self.store = make_store(run_cfg.store, proto, k)
+        # structure/rank probe for the engines' input shardings (the
+        # stacked layout never changes, so compute it once)
+        self._store_struct = self.store.stacked_struct()
         self.broadcast = method.init_server(init_params)
         self.best_acc = np.zeros(k, np.float64)  # per-client best (Table II)
         # explicit participation mask: ``best_acc > 0`` is NOT a
@@ -332,19 +360,34 @@ class Federation:
         self._round = 0
         self._history = {key: [] for key in _HISTORY_KEYS}
 
+    @property
+    def client_states(self):
+        """The (K, ...)-stacked client states in the store's at-rest
+        representation (jnp for the device store, numpy for host/mmap)."""
+        return self.store.stacked()
+
+    @client_states.setter
+    def client_states(self, tree):
+        self.store.load_stacked(tree)
+
     def run_round(self):
         ids = self.rng.choice(self.cfg.n_clients, self.kprime, replace=False)
         batches = self.data.sample_round_batches(self.rng, ids, self.T, self.cfg.batch)
         tests = self.data.client_test_set(ids)
-        jids = jnp.asarray(ids)
+        gathered = self.store.gather(
+            ids, self.programs.gather_shardings(self.kprime, self._store_struct)
+        )
         new_states, uploads, metrics = self.programs.client_fn(self.kprime)(
-            self.client_states, self.broadcast, jids, batches
+            gathered, self.broadcast, batches
         )
         # personalized eval against the pre-update broadcast (the model a
         # client would deploy this round)
         accs = self.programs.eval_fn(self.kprime)(new_states, self.broadcast, tests)
         self.broadcast = self.programs.aggregate(self.broadcast, uploads)
-        self.client_states = self.programs.scatter(self.client_states, jids, new_states)
+        # write-back after upload (§12): the host store starts the d2h
+        # copies here and overlaps them with the next round's host-side
+        # sampling; the device store applies its jitted at[ids].set
+        self.store.scatter(ids, new_states)
 
         accs = np.asarray(accs, np.float64)
         self.best_acc[ids] = np.maximum(self.best_acc[ids], accs)
@@ -395,8 +438,10 @@ class Federation:
     # -- checkpoint / resume ----------------------------------------------
 
     def _ckpt_tree(self):
+        # client_states are NOT in this tree: the store streams them in
+        # client-range shards beside arrays.npz (CohortStore.save_shards,
+        # DESIGN.md §12), bounding checkpoint working memory at one shard
         return {
-            "client_states": self.client_states,
             "broadcast": self.broadcast,
             "best_acc": self.best_acc,
             "participated": self.participated,
@@ -414,7 +459,11 @@ class Federation:
         histories are parity-tested bit-exact across settings
         (tests/test_engine.py, tests/test_multipod.py; the async driver
         separately fingerprints its resolved ``n_pods``, which changes
-        delivery granularity).
+        delivery granularity).  The store facets (kind/cache) are stamped
+        too: store kinds are parity-tested bitwise as well, but the
+        at-rest layout governs how the step directory's shard files are
+        restored, so a resume silently changing it is surfaced rather
+        than absorbed (DESIGN.md §12).
         """
         av = getattr(self, "availability", None)
         return {
@@ -425,6 +474,7 @@ class Federation:
             "local_iters": self.cfg.local_iters,
             "update_impl": self.cfg.update_impl,
             "availability": None if av is None else dataclasses.asdict(av.cfg),
+            "store": self.store.describe(),
         }
 
     def _check_run_fingerprint(self, extra: dict, ckpt_dir) -> None:
@@ -437,13 +487,21 @@ class Federation:
                 "bitwise continuation"
             )
 
+    def _ckpt_extra(self) -> dict:
+        return {"round": self._round, "sim_time": self.sim_time,
+                "driver": "sync", "run_cfg": self._run_fingerprint()}
+
     def save(self, ckpt_dir) -> str:
-        """Checkpoint the full driver state after ``self._round`` rounds."""
-        return save_checkpoint(
-            ckpt_dir, self._round, self._ckpt_tree(),
-            extra={"round": self._round, "sim_time": self.sim_time,
-                   "driver": "sync", "run_cfg": self._run_fingerprint()},
-        )
+        """Checkpoint the full driver state after ``self._round`` rounds:
+        the driver tree into arrays.npz, the client-states stack streamed
+        beside it in store shards (DESIGN.md §12)."""
+        path = save_checkpoint(ckpt_dir, self._round, self._ckpt_tree(),
+                               extra=self._ckpt_extra())
+        self.store.save_shards(path)
+        return path
+
+    def _load_store_shards(self, ckpt_dir, step: int) -> None:
+        self.store.load_shards(Path(ckpt_dir) / f"step_{step:08d}")
 
     def restore(self, ckpt_dir=None, step=None) -> int:
         """Restore state saved by ``save``; returns the round to resume at.
@@ -470,10 +528,10 @@ class Federation:
         tree, extra = load_checkpoint(ckpt_dir, self._ckpt_template(),
                                       step=manifest["step"])
         self._restore_core(tree, extra)
+        self._load_store_shards(ckpt_dir, manifest["step"])
         return self._round
 
     def _restore_core(self, tree, extra):
-        self.client_states = tree["client_states"]
         self.broadcast = tree["broadcast"]
         self.best_acc = np.asarray(tree["best_acc"], np.float64)
         self.participated = np.asarray(tree["participated"], bool)

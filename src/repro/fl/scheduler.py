@@ -93,7 +93,20 @@ class RoundScheduler:
 
     def candidates(self, t: float) -> np.ndarray:
         """Online, idle client ids at time t (sorted — ascending id order,
-        matching the synchronous sampler's arange population)."""
+        matching the synchronous sampler's arange population).
+
+        Always-online models take the vectorized path: a boolean mask over
+        ``arange(K)`` instead of a per-client python loop, which is what
+        makes fleet-scale (K = 10^6) dispatch tractable.  Both paths
+        produce the identical ascending array, so the grouped
+        ``rng.choice`` draw is bitwise the same either way.
+        """
+        if self.avail.always_online:
+            if not self.inflight:
+                return np.arange(self.avail.n, dtype=np.int64)
+            idle = np.ones(self.avail.n, dtype=bool)
+            idle[np.fromiter(self.inflight, np.int64, len(self.inflight))] = False
+            return np.flatnonzero(idle).astype(np.int64)
         return np.asarray(
             [i for i in range(self.avail.n)
              if i not in self.inflight and self.avail.is_online(i, t)],
@@ -179,10 +192,14 @@ class RoundScheduler:
         (a trace model may return inf for permanently-offline clients —
         surfaced as None so callers hit their deadlock error instead of
         advancing the clock to infinity)."""
-        idle = [i for i in range(self.avail.n) if i not in self.inflight]
-        if not idle:
+        if len(self.inflight) >= self.avail.n:
             return None
-        tn = min(self.avail.next_online(i, t) for i in idle)
+        if self.avail.always_online:
+            # some client is idle and every client is online: dispatchable
+            # immediately (``next_online(i, t) == t`` for all i)
+            return t
+        tn = min(self.avail.next_online(i, t)
+                 for i in range(self.avail.n) if i not in self.inflight)
         return tn if np.isfinite(tn) else None
 
     # -- checkpointing -----------------------------------------------------

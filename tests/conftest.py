@@ -1,3 +1,5 @@
+import os
+
 import numpy as np
 import pytest
 
@@ -9,3 +11,17 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(autouse=True)
+def _run_in_tmpdir(tmp_path, monkeypatch):
+    """Run every test chdir'd into its own tmpdir.
+
+    Anything a test (or code under test) writes relative to the CWD —
+    results.json, mmap backing files, stray experiment artifacts — lands
+    in pytest's per-test tmp tree instead of the repo checkout (ISSUE 7:
+    no committed test artifacts).  Tests that need the repo root resolve
+    it from ``__file__`` already.
+    """
+    monkeypatch.chdir(tmp_path)
+    yield

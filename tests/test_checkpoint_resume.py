@@ -8,10 +8,12 @@ aggregation buffer all round-trip).  Plus units for the RandomState
 snapshot helpers and the participated-mask fix to mean_best_acc.
 """
 from dataclasses import replace
+from pathlib import Path
 
 import jax
 import numpy as np
 import pytest
+from hyp_compat import given, hst, settings  # optional-hypothesis shim
 
 from repro.configs.resnet_cifar import SMALL_CNN
 from repro.core.baselines import METHODS
@@ -219,6 +221,104 @@ def test_async_restore_rejects_config_mismatch(setup, tmp_path):
     ok = AsyncFederation(METHODS["pfedsop"](), loss, acc, params, data, cfg,
                          AsyncConfig(buffer_size=2, concurrency=0))
     assert ok.restore() == 2
+
+
+# ---------------------------------------------------------------------------
+# Round-trip fuzz (ISSUE 7): random (backend, mode, ckpt_every, interrupt,
+# store) draws generalize the hand-picked cases above.  The @given variant
+# runs wherever hypothesis is installed (CI); the grid companion pins three
+# seeds so a bare interpreter still exercises the property.
+# ---------------------------------------------------------------------------
+
+
+def _fuzz_roundtrip(setup, tmp_path, seed):
+    data, params, loss, acc = setup
+    rng = np.random.RandomState(seed)
+    backend = ["vmap", "shard_map"][rng.randint(2)]
+    mode = ["sync", "async"][rng.randint(2)]
+    store = ["device", "host"][rng.randint(2)]
+    rounds = int(rng.randint(3, 6))
+    ckpt_every = int(rng.randint(1, 3))
+    # interrupt at a step a checkpoint actually landed on
+    interrupt = ckpt_every * int(rng.randint(1, rounds // ckpt_every + 1))
+    tag = f"fuzz_{seed}_{backend}_{mode}_{store}"
+
+    def make(cfg):
+        if mode == "async":
+            return AsyncFederation(
+                METHODS["pfedsop"](), loss, acc, params, data, cfg,
+                AsyncConfig(buffer_size=2, concurrency=4, availability=HETERO))
+        return Federation(METHODS["pfedsop"](), loss, acc, params, data, cfg)
+
+    base = _cfg(rounds=rounds, backend=backend, store=store)
+    ref = make(base)
+    full = ref.run()
+    cfg = replace(base, ckpt_every=ckpt_every,
+                  ckpt_dir=str(tmp_path / tag))
+    make(cfg).run()
+    fed = make(cfg)
+    assert fed.restore(step=interrupt) == interrupt, (seed, tag)
+    resumed = fed.run()
+    for key in ["loss", "acc", "sim_time", "mean_best_acc"]:
+        assert resumed[key] == full[key], (seed, tag, key)
+    # bitwise final client states, streamed through the store both ways
+    final = jax.tree.leaves(jax.tree.map(np.asarray, fed.client_states))
+    want = jax.tree.leaves(jax.tree.map(np.asarray, ref.client_states))
+    assert all(np.array_equal(a, b) for a, b in zip(final, want)), (seed, tag)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_resume_roundtrip_fuzz_grid(setup, tmp_path, seed):
+    _fuzz_roundtrip(setup, tmp_path, seed)
+
+
+@given(seed=hst.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_resume_roundtrip_fuzzed(setup, tmp_path_factory, seed):
+    _fuzz_roundtrip(setup, tmp_path_factory.mktemp(f"fz{seed}"), seed)
+
+
+def test_async_mid_drain_checkpoint_with_host_store(setup, tmp_path):
+    """Checkpoint cut mid-drain with the streamed store (DESIGN.md §12):
+    the buffer holds pending uploads (host numpy rows routed through the
+    store's write-through scatter path) AND the store's shard files must
+    round-trip beside the driver arrays, bitwise."""
+    data, params, loss, acc = setup
+    acfg = AsyncConfig(buffer_size=3)  # K'=4: every flush leaves a tail
+    make = lambda cfg: AsyncFederation(METHODS["pfedsop"](), loss, acc,
+                                       params, data, cfg, acfg)
+    base = _cfg(rounds=5, store="host")
+    full = make(base).run()
+
+    cfg = replace(base, ckpt_every=1, ckpt_dir=str(tmp_path / "middrain"))
+    make(cfg).run()
+    mani = read_manifest(cfg.ckpt_dir, 2)["extra"]
+    assert mani["n_buffer"] > 0  # the cut really lands mid-drain
+    # the store streamed its shards into the step directory
+    step_dir = Path(cfg.ckpt_dir) / "step_00000002"
+    assert (step_dir / "store_manifest.json").exists()
+    assert list(step_dir.glob("store_*.npz"))
+
+    fed = make(cfg)
+    assert fed.restore(step=2) == 2
+    resumed = fed.run()
+    assert resumed["loss"] == full["loss"]
+    assert resumed["acc"] == full["acc"]
+    assert resumed["staleness"] == full["staleness"]
+
+
+def test_restore_rejects_store_kind_mismatch(setup, tmp_path):
+    """The run fingerprint gains the store config: resuming a host-store
+    checkpoint with a device store would reload shard files into a
+    different at-rest layout than the one stamped at save time."""
+    data, params, loss, acc = setup
+    cfg = _cfg(rounds=2, ckpt_every=2, ckpt_dir=str(tmp_path / "storemix"),
+               store="host")
+    Federation(METHODS["pfedsop"](), loss, acc, params, data, cfg).run()
+    bad = replace(cfg, store="device")
+    fed = Federation(METHODS["pfedsop"](), loss, acc, params, data, bad)
+    with pytest.raises(ValueError, match="run config"):
+        fed.restore()
 
 
 def test_mean_best_acc_counts_zero_acc_participants(setup):

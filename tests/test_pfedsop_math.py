@@ -173,3 +173,141 @@ class TestServerAggregate:
         deltas = {"w": jnp.arange(12.0).reshape(3, 4)}
         agg = pf.server_aggregate(deltas)
         np.testing.assert_allclose(np.asarray(agg["w"]), np.arange(12.0).reshape(3, 4).mean(0))
+
+
+# ---------------------------------------------------------------------------
+# Property hardening (ISSUE 7): fuzzed invariants of the Eq. 14/18 math and
+# the staleness hooks.  The @given variants run in full wherever hypothesis
+# is installed (CI: requirements-dev.txt); each has a deterministic
+# companion sweeping a fixed grid so a bare interpreter still exercises the
+# same invariant instead of skipping it.
+# ---------------------------------------------------------------------------
+
+
+def _angled_deltas(seed, theta, dim=24):
+    """Two pytrees whose flattened angle is exactly ``theta``: dg along a
+    random unit vector u, dl = cos(theta) u + sin(theta) v with v ⟂ u."""
+    rng = np.random.RandomState(seed)
+    u = rng.randn(dim).astype(np.float32)
+    u /= np.linalg.norm(u)
+    v = rng.randn(dim).astype(np.float32)
+    v -= u * (u @ v)
+    v /= np.linalg.norm(v)
+    dl = np.cos(theta) * u + np.sin(theta) * v
+    split = dim // 2
+    tree = lambda x: {"a": jnp.asarray(x[:split]), "b": jnp.asarray(x[split:])}
+    return tree(dl), tree(u)
+
+
+def _gompertz_invariants(lam, seed):
+    thetas = np.linspace(0.0, np.pi, 9)
+    betas = []
+    for th in thetas:
+        dl, dg = _angled_deltas(seed, th)
+        beta, aux = pf.gompertz_weight(dl, dg, lam=lam)
+        beta = float(beta)
+        # bounded in (0, 1]: Gompertz is analytically (0, 1); f32 may
+        # saturate the upper bound at steep lam, never the lower
+        assert 0.0 < beta <= 1.0, (lam, th, beta)
+        np.testing.assert_allclose(float(aux["theta"]), th, atol=1e-3)
+        betas.append(beta)
+    # monotone non-increasing in the angle (f32 tolerance at saturation)
+    assert np.all(np.diff(betas) <= 1e-6), (lam, seed, betas)
+
+
+class TestGompertzProperties:
+    def test_bounds_and_monotonicity_grid(self):
+        for lam in [0.1, 0.5, 1.0, 2.5, 5.0]:
+            for seed in range(5):
+                _gompertz_invariants(lam, seed)
+
+    @given(lam=hst.floats(0.05, 8.0), seed=hst.integers(0, 10_000))
+    @settings(max_examples=50, deadline=None)
+    def test_bounds_and_monotonicity_fuzzed(self, lam, seed):
+        _gompertz_invariants(lam, seed)
+
+    def test_shape_dtype_fuzz_grid(self):
+        """Eq. 14/18 invariants hold across leaf shapes, dtypes and seeds."""
+        for seed in range(4):
+            key = jax.random.PRNGKey(seed)
+            for dtype in [jnp.float32, jnp.float16]:
+                for shape in [(3,), (4, 5), (2, 3, 4)]:
+                    k1, k2 = jax.random.split(jax.random.fold_in(key, hash(shape) % 97))
+                    dl = {"x": jax.random.normal(k1, shape, dtype)}
+                    dg = {"x": jax.random.normal(k2, shape, dtype)}
+                    beta, _ = pf.gompertz_weight(dl, dg, lam=1.0)
+                    assert 0.0 < float(beta) <= 1.0, (dtype, shape, seed)
+                    step = pf.sherman_morrison_step(dl, rho=1.0)
+                    assert step["x"].shape == shape
+                    assert np.all(np.isfinite(np.asarray(step["x"], np.float32)))
+                    # rank-1 identity: step = dp / (rho + ||dp||^2)
+                    sq = float(pt.tree_sqnorm(dl))
+                    np.testing.assert_allclose(
+                        np.asarray(step["x"], np.float32),
+                        np.asarray(dl["x"], np.float32) / (1.0 + sq),
+                        rtol=5e-3, atol=1e-4)
+
+    @given(seed=hst.integers(0, 10_000), dim=hst.integers(1, 64),
+           scale=hst.floats(1e-3, 1e3))
+    @settings(max_examples=50, deadline=None)
+    def test_sherman_morrison_rank1_identity_fuzzed(self, seed, dim, scale):
+        rng = np.random.RandomState(seed)
+        dp = {"v": jnp.asarray(rng.randn(dim).astype(np.float32) * scale)}
+        step = pf.sherman_morrison_step(dp, rho=1.0)
+        sq = float(pt.tree_sqnorm(dp))
+        np.testing.assert_allclose(np.asarray(step["v"]),
+                                   np.asarray(dp["v"]) / (1.0 + sq),
+                                   rtol=1e-4, atol=1e-6)
+
+
+class TestStalenessProperties:
+    def test_discount_tau0_is_exactly_one(self):
+        """(1 + 0)^(-e) == 1.0 in IEEE for every exponent: the bitwise
+        anchor of the async sync-degenerate guarantee."""
+        for exp in [0.0, 0.5, 1.0, 2.0, 7.3]:
+            s = pf.staleness_discount(jnp.zeros((5,), jnp.int32), exp)
+            assert np.asarray(s).tolist() == [1.0] * 5
+
+    def test_stale_blend_tau0_bitwise_identity(self):
+        """discount = 1 -> c = 0 -> blend returns the upload bit-exactly."""
+        for seed in range(6):
+            k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+            up, gd = _tree(k1, scale=3.0), _tree(k2)
+            out = pf.stale_blend(up, gd, discount=jnp.float32(1.0), lam=1.0)
+            for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(up)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_stale_blend_between_upload_and_global(self):
+        """0 < discount < 1: each leaf lies on the [upload, global] segment."""
+        k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+        up, gd = _tree(k1), _tree(k2)
+        out = pf.stale_blend(up, gd, discount=jnp.float32(0.25), lam=1.0)
+        for o, a, b in zip(jax.tree.leaves(out), jax.tree.leaves(up),
+                           jax.tree.leaves(gd)):
+            o, a, b = (np.asarray(x, np.float64) for x in (o, a, b))
+            lo, hi = np.minimum(a, b), np.maximum(a, b)
+            assert np.all(o >= lo - 1e-6) and np.all(o <= hi + 1e-6)
+
+    def test_staleness_weights_mean_one_grid(self):
+        from repro.core.baselines import staleness_weights
+        for seed in range(5):
+            rng = np.random.RandomState(seed)
+            tau = jnp.asarray(rng.randint(0, 20, size=8), jnp.int32)
+            for exp in [0.5, 1.0, 2.0]:
+                w = np.asarray(staleness_weights(tau, exp), np.float64)
+                assert np.all(w > 0)
+                np.testing.assert_allclose(w.mean(), 1.0, rtol=1e-6)
+        # all-fresh buffer: weights are EXACTLY ones (bitwise identity)
+        w = np.asarray(staleness_weights(jnp.zeros((4,), jnp.int32), 1.0))
+        assert w.tolist() == [1.0] * 4
+
+    @given(seed=hst.integers(0, 10_000), n=hst.integers(1, 32),
+           exp=hst.floats(0.0, 5.0))
+    @settings(max_examples=50, deadline=None)
+    def test_staleness_weights_mean_one_fuzzed(self, seed, n, exp):
+        from repro.core.baselines import staleness_weights
+        rng = np.random.RandomState(seed)
+        tau = jnp.asarray(rng.randint(0, 50, size=n), jnp.int32)
+        w = np.asarray(staleness_weights(tau, exp), np.float64)
+        assert np.all(w > 0)
+        np.testing.assert_allclose(w.mean(), 1.0, rtol=1e-5)
