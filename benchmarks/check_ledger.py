@@ -12,6 +12,12 @@ never fail the gate — the sweep grid may grow.
   PYTHONPATH=src python -m benchmarks.run --only cohort-store ...
   python benchmarks/check_ledger.py cohort-store [--min-ratio 0.3]
 
+The ``obs-overhead`` suite (DESIGN.md §13) additionally gates the
+observability contract on the FRESH run: phase-level tracing must cost
+< ``--max-overhead`` (default 5%) per round, and a run with observability
+disabled must have written 0 bytes.  These are absolute gates, not
+ledger ratios — the contract does not drift with the hardware.
+
 Exit 0 on pass, 1 on regression, 2 when either file is missing.
 """
 from __future__ import annotations
@@ -50,6 +56,9 @@ def main() -> int:
                     help="fail when fresh rounds/sec < min_ratio * ledger")
     ap.add_argument("--fresh", default="",
                     help="override the fresh BENCH json path")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="obs-overhead suite: fail when enabled-tracing "
+                         "overhead_frac exceeds this (absolute gate)")
     args = ap.parse_args()
 
     ledger_path = LEDGER / f"BENCH_{args.suite}.json"
@@ -77,9 +86,22 @@ def main() -> int:
               f"(ledger {ledger[key]:.3f}, ratio {ratio:.2f})")
         if ratio < args.min_ratio:
             failures.append(key)
+    fresh_payload = json.loads(fresh_path.read_text())
+    metrics = fresh_payload.get("metrics", {})
+    if "overhead_frac" in metrics:
+        frac = float(metrics["overhead_frac"])
+        dbytes = int(metrics.get("disabled_bytes", 0))
+        status = "OK" if frac < args.max_overhead else "REGRESSION"
+        print(f"  {status:>10}  overhead_frac: {frac:.4f} "
+              f"(gate < {args.max_overhead})")
+        if frac >= args.max_overhead:
+            failures.append("overhead_frac")
+        if dbytes != 0:
+            print(f"  REGRESSION  disabled_bytes: {dbytes} (gate == 0)")
+            failures.append("disabled_bytes")
+
     if failures:
-        print(f"check_ledger: {len(failures)} entries below "
-              f"{args.min_ratio}x the committed trajectory: {failures}",
+        print(f"check_ledger: {len(failures)} gate failures: {failures}",
               file=sys.stderr)
         return 1
     print(f"check_ledger: {args.suite} within {args.min_ratio}x of ledger "

@@ -83,8 +83,22 @@ from repro.fl import (
 )
 from repro.fl.runtime import masked_accuracy
 from repro.models import cnn
+from repro.obs import ObsConfig
 
 OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+# --trace-dir/--obs-level (main) land here; benches that support tracing
+# derive a per-run subdir with _obs_for so fingerprints never collide
+OBS_CFG: dict = {}
+
+
+def _obs_for(tag: str):
+    """Per-bench-run ObsConfig under the harness --trace-dir (or None)."""
+    if not OBS_CFG.get("trace_dir"):
+        return None
+    return ObsConfig(
+        trace_dir=str(Path(OBS_CFG["trace_dir"]) / tag.replace("/", "_")),
+        level=OBS_CFG.get("level", "phase"), quiet=True)
 
 CFG = SMALL_CNN
 METHOD_LIST = ["fedavg", "fedprox", "fedavg_ft", "fedprox_ft", "ditto",
@@ -115,15 +129,19 @@ def _data(partition, seed=0, samples=3000, classes=10, clients=10):
 
 
 def _run(method, data, rounds, seed=0, clients=10, backend="vmap",
-         participation=0.4, update_impl=""):
+         participation=0.4, update_impl="", obs=None):
     loss = lambda p, b: cnn.loss_fn(p, CFG, b)
     acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
     params = cnn.init_params(jax.random.PRNGKey(seed), CFG)
     run_cfg = FLRunConfig(n_clients=clients, participation=participation,
                           rounds=rounds, batch=25, seed=seed, backend=backend,
-                          update_impl=update_impl)
+                          update_impl=update_impl, obs=obs)
     fed = Federation(method, loss, acc, params, data, run_cfg)
-    return fed.run()
+    hist = fed.run()
+    if fed.obs.final_metrics is not None:
+        # surfaced into the suite's BENCH_*.json via the bench return value
+        hist["obs_metrics"] = fed.obs.final_metrics
+    return hist
 
 
 # ---------------------------------------------------------------------------
@@ -470,10 +488,12 @@ def bench_multipod_engine(rounds, interpret=False):
     kprime = int(round(participation * clients))
     buffer_size = kprime  # same server-update budget across drivers
 
-    def _cfg(backend, mesh, update_impl):
-        return FLRunConfig(n_clients=clients, participation=participation,
-                           rounds=r, batch=25, seed=0, backend=backend,
-                           mesh=mesh, update_impl=update_impl)
+    def _cfg(backend, mesh, update_impl, driver):
+        return FLRunConfig(
+            n_clients=clients, participation=participation,
+            rounds=r, batch=25, seed=0, backend=backend,
+            mesh=mesh, update_impl=update_impl,
+            obs=_obs_for(f"multipod/{backend}/{driver}/{update_impl}"))
 
     def time_to(hist, target):
         best = np.maximum.accumulate(hist["acc"])
@@ -489,7 +509,7 @@ def bench_multipod_engine(rounds, interpret=False):
             method = _build("pfedsop")
             for impl in ([kernel_impl, "reference"]
                          if backend == "mesh" else [kernel_impl]):
-                cfg = _cfg(backend, mesh, impl)
+                cfg = _cfg(backend, mesh, impl, driver)
                 if driver == "sync":
                     fed = Federation(method, loss, acc, params, data, cfg,
                                      availability=ClientAvailability(
@@ -519,6 +539,8 @@ def bench_multipod_engine(rounds, interpret=False):
                     "sim_time_total": h["sim_time"][-1],
                     "loss": h["loss"],
                 }
+                if fed.obs.final_metrics is not None:
+                    row[driver]["obs_metrics"] = fed.obs.final_metrics
                 # same impl, any backend: bitwise history parity (§11)
                 if driver not in ref_hist:
                     ref_hist[driver] = h["loss"]
@@ -634,6 +656,71 @@ def bench_cohort_store(rounds):
         for tag, m in row.items():
             print(f"{k:>8} {tag:>11} {m['rounds_per_sec']:>7.2f} "
                   f"{m['h2d_bytes']/1e6:>7.1f} {m['at_rest_bytes']/1e6:>11.1f}")
+    return out
+
+
+def bench_obs_overhead(rounds):
+    """Observability overhead gate (DESIGN.md §13).
+
+    Runs the same federation with observability off and with phase-level
+    tracing + metrics on, and asserts the §13 contract in both directions:
+
+    - **disabled is free**: the off run holds the shared NOOP facade and
+      the would-be trace directory is never created — 0 bytes written;
+    - **enabled changes wall-clock only**: every history series except
+      ``round_time`` (and the attached ``obs_metrics``) is bitwise
+      identical to the off run;
+    - **enabled is cheap**: the per-round overhead fraction is recorded in
+      the BENCH artifact, and ``benchmarks/check_ledger.py obs-overhead``
+      gates it at <5% (the in-bench assert stays loose — CI boxes are
+      noisy — the ledger gate is the enforcement point).
+    """
+    print("\n== obs-overhead: traced vs untraced, same seed ==")
+    import shutil
+
+    data = _data("dirichlet", clients=8, samples=1600)
+    r = max(6, rounds)
+    base = OUT / "obs_trace"
+    off_dir, on_dir = base / "overhead_off", base / "overhead_on"
+    shutil.rmtree(base, ignore_errors=True)
+
+    h_off = _run(_build("pfedsop"), data, r, clients=8, participation=0.5)
+    assert not off_dir.exists(), (
+        "observability off must write 0 bytes, but the trace dir exists")
+    h_on = _run(_build("pfedsop"), data, r, clients=8, participation=0.5,
+                obs=ObsConfig(trace_dir=str(on_dir), level="phase",
+                              quiet=True))
+    for key in h_off:
+        if key == "round_time":
+            continue
+        assert h_off[key] == h_on[key], (
+            f"history[{key!r}] must be bitwise identical traced vs "
+            "untraced (obs reads host numbers, never touches traced values)")
+
+    t_off = float(np.mean(h_off["round_time"][1:]))  # skip compile round
+    t_on = float(np.mean(h_on["round_time"][1:]))
+    overhead = t_on / max(t_off, 1e-9) - 1.0
+    trace_bytes = sum(f.stat().st_size for f in on_dir.rglob("*")
+                      if f.is_file())
+    out = {
+        "rounds": r,
+        "off": {"rounds_per_sec": 1.0 / max(t_off, 1e-9),
+                "disabled_bytes": 0},
+        "on": {"rounds_per_sec": 1.0 / max(t_on, 1e-9),
+               "trace_bytes": trace_bytes,
+               "obs_metrics": h_on.get("obs_metrics")},
+        "overhead_frac": overhead,
+        "disabled_bytes": 0,
+    }
+    print(f"bench,obs-overhead/off,{t_off*1e6:.0f},"
+          f"rounds_per_sec={out['off']['rounds_per_sec']:.3f}")
+    print(f"bench,obs-overhead/on,{t_on*1e6:.0f},"
+          f"rounds_per_sec={out['on']['rounds_per_sec']:.3f},"
+          f"overhead_frac={overhead:.4f},trace_kb={trace_bytes/1e3:.1f}")
+    # loose in-bench sanity bound only (see docstring): a 2x slowdown
+    # means the instrumentation landed on the traced path, not the host
+    assert overhead < 1.0, (
+        f"phase-level tracing more than doubled round time: {overhead:.2f}")
     return out
 
 
@@ -761,6 +848,7 @@ BENCHES = {
     "async-engine": bench_async_engine,
     "multipod-engine": bench_multipod_engine,
     "cohort-store": bench_cohort_store,
+    "obs-overhead": bench_obs_overhead,
     "model-fwd": bench_model_fwd,
     "roofline": bench_roofline,
 }
@@ -804,7 +892,16 @@ def main():
                     help="commit timestamp (e.g. git log -1 --format=%%cI) "
                          "stamped into BENCH_<suite>.json; passed in, not "
                          "sampled, so artifacts are reproducible per commit")
+    ap.add_argument("--trace-dir", default="",
+                    help="trace supporting benches (multipod-engine) into "
+                         "per-run subdirs here (DESIGN.md §13); summarize "
+                         "with scripts/trace_report.py")
+    ap.add_argument("--obs-level", choices=["round", "phase", "kernel"],
+                    default="phase",
+                    help="instrumentation depth for --trace-dir runs")
     args = ap.parse_args()
+    if args.trace_dir:
+        OBS_CFG.update(trace_dir=args.trace_dir, level=args.obs_level)
 
     OUT.mkdir(parents=True, exist_ok=True)
     names = args.only or list(BENCHES)

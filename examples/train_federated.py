@@ -71,6 +71,7 @@ from repro.fl import (
 )
 from repro.fl.runtime import masked_accuracy
 from repro.models import cnn
+from repro.obs import ObsConfig
 from repro.utils.checkpoint import latest_step, save_checkpoint
 
 
@@ -179,6 +180,31 @@ def main():
                          "most recently sampled clients in an LRU cache, "
                          "skipping their host->device copy on re-sampling "
                          "(0 = no cache)")
+    # -- observability (DESIGN.md §13) -------------------------------------
+    ap.add_argument("--trace-dir", default="",
+                    help="write a structured event trace under this directory "
+                         "(per-method subdirs, like --ckpt-dir); the drivers "
+                         "export a Perfetto-loadable trace.json on completion "
+                         "and scripts/trace_report.py summarizes it. "
+                         "Fingerprint-stamped: re-running a --resume'd config "
+                         "appends with a resume marker instead of clobbering")
+    ap.add_argument("--metrics", default="",
+                    help="metrics.jsonl path ('' = <trace-dir>/<method>/"
+                         "metrics.jsonl when tracing); counters/gauges/"
+                         "histograms snapshot once per applied server update")
+    ap.add_argument("--obs-level", choices=["off", "round", "phase", "kernel"],
+                    default="phase",
+                    help="instrumentation depth (DESIGN.md §13): round = "
+                         "round spans + metrics; phase = + per-phase spans "
+                         "with block-until-ready boundaries; kernel = + "
+                         "jax.profiler annotations around kernel launches")
+    ap.add_argument("--xla-profile", type=int, default=-1,
+                    help="capture a jax.profiler trace of this round/version "
+                         "index under <trace-dir>/<method>/xla (-1 = off; "
+                         "1 is the first post-compile round)")
+    ap.add_argument("--obs-quiet", action="store_true",
+                    help="suppress the drivers' stdout progress lines "
+                         "(structured records still land in the trace)")
     # -- checkpointing ----------------------------------------------------
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="checkpoint the full driver state every N applied "
@@ -208,6 +234,16 @@ def main():
     if args.backend == "mesh" and not args.mesh:
         ap.error("--backend mesh requires --mesh (e.g. 'pods:2x2x2'); see "
                  "repro.launch.mesh.parse_mesh for the grammar")
+    if args.xla_profile >= 0 and not args.trace_dir:
+        ap.error("--xla-profile dumps under <trace-dir>/<method>/xla, so it "
+                 "requires --trace-dir")
+    if args.obs_level == "off" and (args.trace_dir or args.metrics):
+        ap.error("--obs-level off disables every sink, so --trace-dir/"
+                 "--metrics would be silently ignored")
+    if args.metrics and len(args.methods) > 1:
+        ap.error("--metrics names a single file; each of the "
+                 f"{len(args.methods)} --methods would clobber it — use "
+                 "--trace-dir (per-method metrics.jsonl subdirs) instead")
     if args.cache_clients and args.store == "device":
         ap.error("--cache-clients only applies to --store host/mmap (the "
                  "device store keeps every client resident, so a device "
@@ -287,6 +323,12 @@ def main():
         cfg_m = run_cfg if name.startswith("pfedsop") else replace(run_cfg, update_impl="")
         if args.ckpt_dir:
             cfg_m = replace(cfg_m, ckpt_dir=str(Path(args.ckpt_dir) / name))
+        if args.trace_dir or args.metrics or args.obs_quiet:
+            cfg_m = replace(cfg_m, obs=ObsConfig(
+                trace_dir=(str(Path(args.trace_dir) / name)
+                           if args.trace_dir else ""),
+                metrics=args.metrics, level=args.obs_level,
+                quiet=args.obs_quiet, xla_profile=args.xla_profile))
         method = build_method(name, args.lr, args)
         if args.mode == "async":
             fed = AsyncFederation(method, loss, acc, params, data, cfg_m)
@@ -299,12 +341,17 @@ def main():
                              availability=model)
         if args.resume and latest_step(cfg_m.ckpt_dir) is not None:
             at = fed.restore()
-            print(f"[{name}] resumed from {cfg_m.ckpt_dir} at round {at}")
+            fed.obs.log.info(
+                f"[{name}] resumed from {cfg_m.ckpt_dir} at round {at}",
+                event="resume_notice", method=name, round=int(at))
         hist = fed.run(verbose=True)
         results[name] = hist
-        print(f"--> {name}: mean best acc {hist['mean_best_acc']:.4f}, "
-              f"mean round time {np.mean(hist['round_time'][1:]):.2f}s, "
-              f"sim wall-clock {hist['sim_time'][-1]:.1f}")
+        fed.obs.log.info(
+            f"--> {name}: mean best acc {hist['mean_best_acc']:.4f}, "
+            f"mean round time {np.mean(hist['round_time'][1:]):.2f}s, "
+            f"sim wall-clock {hist['sim_time'][-1]:.1f}",
+            event="method_summary", method=name,
+            mean_best_acc=float(hist["mean_best_acc"]))
         if args.checkpoint_dir:
             save_checkpoint(Path(args.checkpoint_dir) / name, args.rounds,
                             {"broadcast": fed.broadcast},

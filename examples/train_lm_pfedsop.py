@@ -19,6 +19,7 @@ from repro.configs import ARCH_NAMES, get_config
 from repro.core import pfedsop as pf
 from repro.data import lm_batch_iterator, synthetic_lm_stream
 from repro.models import transformer as tf
+from repro.obs import get_obs
 
 
 def main():
@@ -79,8 +80,14 @@ def main():
             betas.append(float(m["beta"]))
         stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *deltas)
         global_delta, has_global = pf.server_aggregate(stacked), jnp.asarray(True)
-        print(f"round {t:3d} loss={np.mean(losses):.6f} "
-              f"beta={np.mean(betas):.3f} ({time.perf_counter()-t0:.1f}s)")
+        # routed through the obs structured logger (quiet-able; mirrors
+        # into an open trace); the 6-decimal loss format is load-bearing —
+        # the impl-parity test reads histories off these lines
+        get_obs().log.info(
+            f"round {t:3d} loss={np.mean(losses):.6f} "
+            f"beta={np.mean(betas):.3f} ({time.perf_counter()-t0:.1f}s)",
+            event="round", round=t, loss=float(np.mean(losses)),
+            beta=float(np.mean(betas)))
 
     assert np.isfinite(np.mean(losses))
     print("OK: federated LM training ran end-to-end "

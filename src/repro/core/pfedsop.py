@@ -142,6 +142,25 @@ def personalized_delta(local_delta, global_delta, lam, eps=1e-12):
     return tree_lerp(beta, local_delta, global_delta), aux
 
 
+def theta_from_beta(beta, lam):
+    """Invert Eq. 14 to recover the angle theta from a recorded beta.
+
+    Host-side numpy, for diagnostics only (the observability layer's
+    per-round theta histograms, DESIGN.md §13): the client programs
+    materialize beta in their metrics, and
+
+        theta = 1 - ln(-ln(1 - beta)) / lam
+
+    maps it back.  beta is clipped away from {0, 1} (where the double
+    exponential saturates) and the result to Eq. 14's domain [0, pi].
+    """
+    import numpy as np
+
+    b = np.clip(np.asarray(beta, np.float64), 1e-9, 1.0 - 1e-9)
+    theta = 1.0 - np.log(-np.log1p(-b)) / float(lam)
+    return np.clip(theta, 0.0, np.pi)
+
+
 # ---------------------------------------------------------------------------
 # Sherman-Morrison second-order step (Algorithm 1 line 5, Eq. 18)
 # ---------------------------------------------------------------------------
@@ -232,14 +251,16 @@ def _personalize_fused(params, local_delta, global_delta, cfg, interpret):
     The model-shard context (set by a §11 mesh engine around body tracing)
     is read host-side here, so the sharded layout is baked into the trace.
     """
-    from repro.kernels.dispatch import current_model_shard
+    from repro.kernels.dispatch import current_model_shard, kernel_scope
 
     xv = tree_flatten_to_vector(params)
     div = tree_flatten_to_vector(local_delta)
     dgv = tree_flatten_to_vector(global_delta)
     fused = _fused_flat_update(cfg.eta1, cfg.rho, cfg.lam, cfg.eps, interpret,
                                shard=current_model_shard())
-    new_v, beta = fused(xv, div, dgv)
+    with kernel_scope("pfedsop_update",
+                      "kernel_interpret" if interpret else "kernel"):
+        new_v, beta = fused(xv, div, dgv)
     return tree_unflatten_from_vector(new_v, params), {"beta": beta}
 
 

@@ -64,6 +64,11 @@ Pytree = Any
 # clock, or delivers, so real configurations flush far sooner)
 _MAX_IDLE_STEPS = 100_000
 
+# staleness histogram edges (DESIGN.md §13): τ in powers of two (counts[0]
+# is the fresh τ=0 bucket), discount s(τ) ∈ (0, 1] in tenths
+_TAU_EDGES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+_DISCOUNT_EDGES = tuple(i / 10 for i in range(1, 10))
+
 
 @dataclass(frozen=True)
 class AsyncConfig:
@@ -116,6 +121,7 @@ class AsyncFederation(Federation):
         self.n_pods = getattr(self.engine, "n_pods", 1)
         self.scheduler = RoundScheduler(self.availability, self.concurrency,
                                         n_pods=self.n_pods)
+        self.scheduler.obs = self.obs
         # in-flight results, computed at dispatch (the simulator needs no
         # delayed compute — only delayed *delivery*): client -> slices
         self._pending: Dict[int, dict] = {}
@@ -124,20 +130,31 @@ class AsyncFederation(Federation):
         self._buffer: List[dict] = []
         self._history["staleness"] = []
         self._t0 = time.perf_counter()
+        self._obs_open()
 
     @property
     def version(self) -> int:
         """Applied server updates so far (the FedBuff 'server version')."""
         return self._round
 
+    def _obs_fingerprint(self) -> dict:
+        return {**super()._obs_fingerprint(), "driver": "async",
+                "async": self._acfg_fingerprint()}
+
     # -- event loop --------------------------------------------------------
 
     def run(self, verbose: bool = False):
         self._t0 = time.perf_counter()
+        obs = self.obs
         idle = 0
         while self._round < self.cfg.rounds:
             v0 = self._round
+            # version-window profiling: the window opens while version v0
+            # is current and closes at the step that advances past it
+            obs.xla_round_start(v0)
             self._step()
+            if self._round > v0:
+                obs.xla_round_end(v0)
             idle = 0 if self._round > v0 else idle + 1
             if idle > _MAX_IDLE_STEPS:
                 raise RuntimeError(
@@ -147,12 +164,16 @@ class AsyncFederation(Federation):
                 )
             if verbose and self._round > v0 and (
                     self._round % 10 == 0 or self._round == self.cfg.rounds):
-                print(
+                obs.log.info(
                     f"[{self.method.name}/async] version {self._round:4d} "
                     f"loss={self._history['loss'][-1]:.4f} "
                     f"acc={self._history['acc'][-1]:.4f} "
                     f"sim_t={self.sim_time:.2f} "
-                    f"tau={self._history['staleness'][-1]:.2f}"
+                    f"tau={self._history['staleness'][-1]:.2f}",
+                    event="version", version=self._round,
+                    loss=self._history["loss"][-1],
+                    acc=self._history["acc"][-1], sim_time=self.sim_time,
+                    tau=self._history["staleness"][-1],
                 )
         history = self._finalize_history()
         # describe an engine that actually ran (the largest cohort seen):
@@ -167,6 +188,7 @@ class AsyncFederation(Federation):
             "buffer_size": self.buffer_size,
             "concurrency": self.concurrency,
         }
+        obs.close()
         return history
 
     def _step(self):
@@ -231,13 +253,25 @@ class AsyncFederation(Federation):
         from the shared participation RNG in one grouped call — the same
         consumption pattern as the synchronous driver.
         """
+        obs = self.obs
+        obs.event("dispatch", track="async", sim=self.sim_time,
+                  cohort=len(ids), version=self._round)
         batches = self.data.sample_round_batches(self.rng, ids, self.T, self.cfg.batch)
-        gathered = self.store.gather(
-            ids, self.programs.gather_shardings(len(ids), self._store_struct)
+        gathered = obs.timed(
+            "gather", self.store.gather,
+            ids, self.programs.gather_shardings(len(ids), self._store_struct),
+            sim=self.sim_time,
         )
-        new_states, uploads, metrics = self.programs.client_fn(len(ids))(
-            gathered, self.broadcast, batches
-        )
+        out = obs.timed("client", self.programs.client_fn(len(ids)),
+                        gathered, self.broadcast, batches, sim=self.sim_time)
+        # round-boundary all-gather as its own program/span (see
+        # Federation.run_round); None on vmap, whose outputs are born
+        # replicated
+        rep = self.programs.replicate_fn(len(ids))
+        if rep is not None:
+            out = obs.timed("all_gather", rep, out, sim=self.sim_time)
+        new_states, uploads, metrics = out
+        self._observe_client_metrics(metrics)
         # route in-flight results through the store's offload policy
         # (DESIGN.md §12): a host/mmap store ALWAYS host-copies — buffered
         # uploads must never pin device memory — and the device store
@@ -266,21 +300,31 @@ class AsyncFederation(Federation):
         (matching the synchronous pre-update eval semantics), and append
         its uploads to the aggregation buffer — flushing whenever
         ``buffer_size`` is reached."""
+        obs = self.obs
+        obs.event("deliver", track="async", sim=self.sim_time,
+                  cohort=len(done), version=self._round)
         items = [self._pending.pop(i) for i in done]
         stacked = jax.tree.map(
             lambda *xs: jnp.stack(xs), *[it["state"] for it in items]
         )
         dn = np.asarray(done, np.int64)
         tests = self.data.client_test_set(dn)
-        accs = self.programs.eval_fn(len(done))(stacked, self.broadcast, tests)
+        accs = obs.timed("eval", self.programs.eval_fn(len(done)),
+                         stacked, self.broadcast, tests, sim=self.sim_time)
         accs = np.asarray(accs, np.float64)
         self.best_acc[dn] = np.maximum(self.best_acc[dn], accs)
         self.participated[dn] = True
-        self.store.scatter(dn, stacked)
+        # sync=False: the host store's d2h write-back is deliberately
+        # deferred/overlapped (§12) — the span records submit time only
+        obs.timed("scatter", self.store.scatter, dn, stacked,
+                  sync=False, sim=self.sim_time)
         # append the WHOLE cohort before flushing: a checkpoint written by a
         # flush must see every delivered upload in the buffer (or already
         # aggregated) — flushing mid-append would let ckpt_every cut the
-        # not-yet-appended tail of the cohort out of the saved state
+        # not-yet-appended tail of the cohort out of the saved state.
+        # ``sim_t`` (delivery time) exists for the per-client buffered-wait
+        # track only — checkpoints don't carry it, so a restored item falls
+        # back to the flush time (see _flush).
         for it, i, a in zip(items, done, accs):
             self._buffer.append({
                 "client": int(i),
@@ -288,6 +332,7 @@ class AsyncFederation(Federation):
                 "loss": it["loss"],
                 "acc": a,
                 "version": it["version"],
+                "sim_t": self.sim_time,
             })
         self._drain()
 
@@ -302,6 +347,7 @@ class AsyncFederation(Federation):
 
     def _flush(self):
         """Apply one buffered server update (version += 1)."""
+        obs = self.obs
         items = self._buffer[: self.buffer_size]
         del self._buffer[: self.buffer_size]
         uploads = jax.tree.map(
@@ -309,8 +355,10 @@ class AsyncFederation(Federation):
         )
         tau = np.asarray([self._round - it["version"] for it in items], np.int64)
         if tau.any():
-            self.broadcast = self.programs.aggregate_stale(
-                self.broadcast, uploads, jnp.asarray(tau, jnp.int32)
+            self.broadcast = obs.timed(
+                "aggregate_stale", self.programs.aggregate_stale,
+                self.broadcast, uploads, jnp.asarray(tau, jnp.int32),
+                sim=self.sim_time,
             )
         else:
             # all-fresh buffer: the staleness hook is the identity at
@@ -318,7 +366,10 @@ class AsyncFederation(Federation):
             # so take the plain aggregation program — the same compiled
             # program the synchronous driver runs, which makes the
             # sync-degenerate guarantee structural
-            self.broadcast = self.programs.aggregate(self.broadcast, uploads)
+            self.broadcast = obs.timed(
+                "aggregate", self.programs.aggregate,
+                self.broadcast, uploads, sim=self.sim_time,
+            )
         self._round += 1
         dt = time.perf_counter() - self._t0
         self._t0 = time.perf_counter()
@@ -331,9 +382,45 @@ class AsyncFederation(Federation):
         self._history["round_time"].append(dt)
         self._history["sim_time"].append(self.sim_time)
         self._history["staleness"].append(float(tau.mean()))
+        self._observe_flush(items, tau, dt)
         if (self.cfg.ckpt_every and self.cfg.ckpt_dir
                 and self._round % self.cfg.ckpt_every == 0):
             self.save(self.cfg.ckpt_dir)
+
+    def _observe_flush(self, items, tau: np.ndarray, dt: float) -> None:
+        """Per-applied-version observability (DESIGN.md §13): the flush
+        event with its τ annotations, the per-client buffered-wait track,
+        and the staleness histograms — τ itself plus the effective
+        FedBuff discount s(τ) = (1+τ)^(-staleness_exp) the stale path
+        blends with (``repro.core.pfedsop.staleness_discount``).  Pure
+        reads of host values the flush already produced."""
+        obs = self.obs
+        v = self._round - 1
+        obs.event("buffer_flush", track="async", sim=self.sim_time,
+                  version=v, n=len(items), tau_mean=float(tau.mean()),
+                  tau_max=int(tau.max()), stale=bool(tau.any()))
+        if obs.tracer is not None:
+            for it in items:
+                obs.client_span(
+                    it["client"], "buffered",
+                    it.get("sim_t", self.sim_time), self.sim_time,
+                    tau=int(self._round - 1 - it["version"]), version=v)
+        reg = obs.metrics
+        if reg is not None:
+            reg.counter("versions").inc()
+            reg.gauge("loss").set(self._history["loss"][-1])
+            reg.gauge("acc").set(self._history["acc"][-1])
+            reg.gauge("round_time").set(dt)
+            reg.gauge("staleness").set(float(tau.mean()))
+            reg.histogram("async.tau", _TAU_EDGES).observe(tau)
+            exp_ = getattr(getattr(self.method, "cfg", None),
+                           "staleness_exp", None)
+            if exp_ is not None:
+                reg.histogram("async.stale_discount", _DISCOUNT_EDGES).observe(
+                    (1.0 + tau.astype(np.float64)) ** -float(exp_))
+            reg.set_gauges("store", self.store.stats())
+            obs.flush_metrics(step=v, sim_time=self.sim_time)
+        obs.flush()
 
     # -- checkpoint / resume ----------------------------------------------
 

@@ -152,6 +152,12 @@ class CohortStore:
         self._stats = {
             "gathers": 0, "scatters": 0, "h2d_bytes": 0, "d2h_bytes": 0,
             "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
+            # batched-cache counters (DESIGN.md §13): cohorts assembled by
+            # the slot buffer's single gather-by-index, and rows written
+            # into it by batched inserts (gather misses + scatter
+            # write-through) — one device op each where the pre-batched
+            # cache issued one per row
+            "cache_assembles": 0, "cache_insert_rows": 0,
         }
 
     # -- the gather/scatter contract (DESIGN.md §12) ----------------------
@@ -364,10 +370,17 @@ class HostStore(CohortStore):
         _, self._treedef = jax.tree_util.tree_flatten(proto_np)
         self._data = jax.tree_util.tree_unflatten(self._treedef, leaves)
         self.at_rest_bytes = k * _tree_bytes(proto_np)
+        # a "host" store that crossed mmap_threshold_bytes silently spilled
+        # to disk — surfaced as a timeline event by the drivers (§13)
+        self.promoted = cfg.kind == "host" and self.mmapped
         # deferred write-backs: (ids, device tree) with d2h copies started
         self._writeback: List[Tuple[np.ndarray, Pytree]] = []
-        # LRU device cache: client id -> per-client device row pytree
-        self._cache: "OrderedDict[int, Pytree]" = OrderedDict()
+        # LRU device cache as a slot buffer (see _slots_* above): one
+        # (cache_clients, ...)-stacked device tree (lazily allocated),
+        # client id -> slot index in LRU order, and the free slot pool
+        self._slots: Optional[Pytree] = None
+        self._lru: "OrderedDict[int, int]" = OrderedDict()
+        self._free: List[int] = []
 
     # -- deferred write-back ----------------------------------------------
 
@@ -396,40 +409,77 @@ class HostStore(CohortStore):
             return jax.tree.map(jax.device_put, block, shardings)
         return self._gather_cached(ids)
 
+    def _ensure_slots(self):
+        if self._slots is None:
+            cap = self.cfg.cache_clients
+            self._slots = jax.tree.map(
+                lambda a: jnp.zeros((cap,) + a.shape[1:], a.dtype), self._data
+            )
+            self._free = list(range(cap - 1, -1, -1))  # pop() fills 0, 1, ...
+
     def _gather_cached(self, ids):
+        """Cohort assembly through the LRU slot buffer: ONE batched
+        gather-by-index over [slot buffer ‖ fetched miss block] instead of
+        a per-row stack (DESIGN.md §12) — row values bit-identical.
+
+        The output index map is computed BEFORE any cache bookkeeping:
+        filling a miss can evict a slot this same cohort still needs (a
+        hit older in LRU order, or an earlier miss when K' exceeds the
+        capacity), so assembly must see the pre-insertion slot layout.
+        """
         id_list = ids.tolist()
-        miss = [i for i in id_list if i not in self._cache]
+        cap = self.cfg.cache_clients
+        lru = self._lru
+        # duplicate occurrences count per-occurrence, and a duplicated miss
+        # fetches (and later writes) its row once per occurrence with the
+        # last one winning — the per-row cache's exact semantics
+        miss = [i for i in id_list if i not in lru]
         self._stats["cache_hits"] += len(id_list) - len(miss)
         self._stats["cache_misses"] += len(miss)
-        fetched = {}
+        self._stats["cache_assembles"] += 1
+        block = None
         if miss:
+            self._ensure_slots()
             marr = np.asarray(miss, np.int64)
-            block = jax.tree.map(lambda a: a[marr], self._data)
-            self._stats["h2d_bytes"] += _tree_bytes(block)
-            dev = jax.tree.map(jax.device_put, block)
-            for j, i in enumerate(miss):
-                fetched[i] = jax.tree.map(lambda x: x[j], dev)
-        # capture every output row BEFORE any cache insertion: inserting a
-        # miss can evict a row this same cohort still needs (a hit older in
-        # LRU order, or an earlier miss when K' > cache_clients)
-        rows = []
+            host_block = jax.tree.map(lambda a: a[marr], self._data)
+            self._stats["h2d_bytes"] += _tree_bytes(host_block)
+            block = jax.tree.map(jax.device_put, host_block)
+        mpos = {i: j for j, i in enumerate(miss)}  # last occurrence wins
+        idx = np.asarray(
+            [lru[i] if i in lru else cap + mpos[i] for i in id_list],
+            np.int64,
+        )
+        if block is None:
+            cohort = _slots_take(self._slots, idx)
+        else:
+            cohort = _slots_assemble(self._slots, block, idx)
+        # LRU bookkeeping, in the per-row cache's exact order: hits touch
+        # in cohort order, then misses insert (evicting from the front) in
+        # miss order
         for i in id_list:
-            row = self._cache.get(i)
-            if row is None:
-                row = fetched[i]
+            if i in lru:
+                lru.move_to_end(i)
+        pend: Dict[int, int] = {}
+        for j, i in enumerate(miss):
+            if i in lru:  # duplicated miss: already placed this cohort
+                lru.move_to_end(i)
             else:
-                self._cache.move_to_end(i)
-            rows.append(row)
-        for i in miss:
-            self._insert(i, fetched[i])
-        return jax.tree.map(lambda *xs: jnp.stack(xs), *rows)
-
-    def _insert(self, i, row):
-        self._cache[i] = row
-        self._cache.move_to_end(i)
-        while len(self._cache) > self.cfg.cache_clients:
-            self._cache.popitem(last=False)
-            self._stats["cache_evictions"] += 1
+                if len(lru) >= cap:
+                    _, slot = lru.popitem(last=False)
+                    self._free.append(slot)
+                    self._stats["cache_evictions"] += 1
+                lru[i] = self._free.pop()
+            pend[i] = j
+        # one batched fill for the misses that survived their own cohort's
+        # evictions (an id evicted above never reaches the slot buffer,
+        # exactly as its row never stayed in the per-row cache)
+        live = [(lru[i], j) for i, j in pend.items() if i in lru]
+        if live:
+            sarr = np.asarray([s for s, _ in live], np.int64)
+            jarr = np.asarray([j for _, j in live], np.int64)
+            self._slots = _slots_insert(self._slots, block, jarr, sarr)
+            self._stats["cache_insert_rows"] += len(live)
+        return cohort
 
     def scatter(self, ids, new_states):
         self._stats["scatters"] += 1
@@ -442,7 +492,9 @@ class HostStore(CohortStore):
             host = jax.tree.map(np.asarray, new_states)
             jax.tree.map(lambda a, h: a.__setitem__(ids, h), self._data, host)
             for i in ids.tolist():  # cached device rows are now stale
-                self._cache.pop(i, None)
+                slot = self._lru.pop(i, None)
+                if slot is not None:
+                    self._free.append(slot)
             return
         # start the d2h copies now, materialize at the next host access:
         # the copy overlaps the host-side sampling/dispatch of the next
@@ -451,9 +503,24 @@ class HostStore(CohortStore):
         self._stats["d2h_bytes"] += _tree_bytes(new_states)
         self._writeback.append((ids, new_states))
         if self.cfg.cache_clients:
+            # write-through into the slot buffer, one batched fill: rows
+            # already resident refresh in place; new rows only while free
+            # capacity remains (the per-row cache's sequential admission —
+            # scatter never evicts)
+            self._ensure_slots()
+            lru, pend = self._lru, {}
             for j, i in enumerate(ids.tolist()):
-                if i in self._cache or len(self._cache) < self.cfg.cache_clients:
-                    self._insert(i, jax.tree.map(lambda x: x[j], new_states))
+                if i in lru:
+                    lru.move_to_end(i)
+                    pend[i] = j
+                elif len(lru) < self.cfg.cache_clients:
+                    lru[i] = self._free.pop()
+                    pend[i] = j
+            if pend:
+                sarr = np.asarray([lru[i] for i in pend], np.int64)
+                jarr = np.asarray(list(pend.values()), np.int64)
+                self._slots = _slots_insert(self._slots, new_states, jarr, sarr)
+                self._stats["cache_insert_rows"] += len(pend)
 
     def offload(self, tree, force_host=False):
         del force_host  # host store: buffered results NEVER pin device memory
@@ -469,9 +536,14 @@ class HostStore(CohortStore):
         self._flush()
         return self._data
 
+    def _drop_cache(self):
+        self._slots = None  # reallocated lazily on the next cached access
+        self._lru.clear()
+        self._free = []
+
     def load_stacked(self, tree):
         self._writeback.clear()
-        self._cache.clear()
+        self._drop_cache()
         jax.tree.map(
             lambda a, src: a.__setitem__(slice(None), np.asarray(src)),
             self._data, tree,
@@ -483,10 +555,41 @@ class HostStore(CohortStore):
 
     def _load_host_block(self, lo, hi, flat_leaves):
         self._writeback.clear()
-        self._cache.clear()
+        self._drop_cache()
         flat, _ = jax.tree_util.tree_flatten(self._data)
         for a, b in zip(flat, flat_leaves):
             a[lo:hi] = b
+
+
+# -- batched LRU slot-buffer programs (DESIGN.md §12) -----------------------
+#
+# The LRU device cache keeps its resident rows in ONE (C, ...)-stacked
+# device tree (the "slot buffer") instead of C per-row arrays, so cohort
+# assembly and cache fill are single jitted programs over the whole cohort
+# rather than per-row stacks/slices.  Pure data movement — row values are
+# bit-identical to the per-row representation they replace (asserted in
+# tests/test_cohort_store.py).  Module-level jits: shared across stores,
+# cached per (capacity, cohort, leaf) shapes.
+
+@jax.jit
+def _slots_take(slots, idx):
+    """Assemble an all-hit cohort: one gather-by-index per leaf."""
+    return jax.tree.map(lambda s: s[idx], slots)
+
+
+@jax.jit
+def _slots_assemble(slots, block, idx):
+    """Assemble a mixed cohort from the slot buffer (C rows) and the
+    freshly fetched miss block (M rows): index into their concatenation —
+    position j < C selects slot j, position C + m selects miss row m."""
+    return jax.tree.map(lambda s, b: jnp.concatenate([s, b], 0)[idx],
+                        slots, block)
+
+
+@jax.jit
+def _slots_insert(slots, src, jarr, sarr):
+    """Batched cache fill: slot[sarr[r]] = src[jarr[r]] for every row r."""
+    return jax.tree.map(lambda s, x: s.at[sarr].set(x[jarr]), slots, src)
 
 
 def make_store(store, proto: Pytree, k: int) -> CohortStore:

@@ -112,6 +112,11 @@ class VmapBackend:
             gathered_states, broadcast, batches
         )
 
+    # single-device outputs are trivially "replicated": the sharded/
+    # replicate factoring (see MeshBackend) collapses to the fused phase
+    client_phase_sharded = client_phase
+    replicate = None
+
     def eval_phase(self, one_eval, states, broadcast, test_sets):
         return jax.vmap(one_eval, in_axes=(0, None, 0))(
             states, broadcast, test_sets
@@ -251,7 +256,7 @@ class MeshBackend:
 
         return jax.tree.map(gather, tree, specs)
 
-    def _sharded(self, fn, *in_trees, broadcast):
+    def _sharded(self, fn, *in_trees, broadcast, replicated: bool = True):
         specs = tuple(self._in_specs(t) for t in in_trees)
         caxis = self.spec.client_axis if self.client_sharded else None
         out_spec = P(caxis) if caxis else P()
@@ -266,8 +271,8 @@ class MeshBackend:
 
         # check_rep=False: jax has no replication rule for pallas_call, so
         # the rep checker rejects the kernel update impl (DESIGN.md §9).
-        # Safe here — outputs are re-constrained to replicated below, so
-        # the check would not tighten anything.
+        # Safe here — outputs are re-constrained to replicated at the round
+        # boundary (``replicate``), so the check would not tighten anything.
         msize = self.spec.model_size
         ctx = (model_shard_axis(self.spec.model_axis, msize)
                if self.spec.model_axis is not None and msize > 1
@@ -280,10 +285,16 @@ class MeshBackend:
                 out_specs=out_spec,
                 check_rep=False,
             )(broadcast, *in_trees)
-        # round-boundary all-gather: outputs leave the engine fully
-        # replicated, so server aggregation compiles to the same
-        # mesh-shape-invariant program under every backend (the bitwise
-        # parity contract; DESIGN.md §11)
+        return self.replicate(out) if replicated else out
+
+    def replicate(self, out):
+        """The round-boundary all-gather: outputs leave the engine fully
+        replicated, so server aggregation compiles to the same
+        mesh-shape-invariant program everywhere (the bitwise parity
+        contract; DESIGN.md §11).  Pure data movement — values are bitwise
+        identical whether this runs fused with the client phase or as its
+        own program, which is how the observability layer times it as a
+        separate span without forking the math (§13)."""
         return jax.lax.with_sharding_constraint(
             out, NamedSharding(self.mesh, P())
         )
@@ -302,6 +313,14 @@ class MeshBackend:
 
     def client_phase(self, one_client, gathered_states, broadcast, batches):
         return self._sharded(one_client, gathered_states, batches, broadcast=broadcast)
+
+    def client_phase_sharded(self, one_client, gathered_states, broadcast, batches):
+        """Client phase WITHOUT the round-boundary all-gather: outputs stay
+        client-sharded (P(caxis)); callers compose ``replicate`` before
+        aggregation.  The drivers use this factored pair so the all-gather
+        is attributable as its own trace span (DESIGN.md §13)."""
+        return self._sharded(one_client, gathered_states, batches,
+                             broadcast=broadcast, replicated=False)
 
     def eval_phase(self, one_eval, states, broadcast, test_sets):
         return self._sharded(one_eval, states, test_sets, broadcast=broadcast)

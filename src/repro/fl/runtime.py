@@ -38,10 +38,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.baselines import FLMethod
+from repro.core.pfedsop import theta_from_beta
 from repro.data.federated import FederatedData
 from repro.fl.cohort_store import make_store
 from repro.fl.engine import make_engine
 from repro.kernels.dispatch import resolve_update_impl
+from repro.obs import NOOP, make_obs
 from repro.utils.checkpoint import (
     load_checkpoint,
     read_manifest,
@@ -147,6 +149,13 @@ class FLRunConfig:
     # Streamed execution is bitwise identical to the device store
     # (tests/test_cohort_store.py), so this is purely a capacity knob.
     store: Any = None
+    # Observability (DESIGN.md §13): None (off — the driver holds the
+    # shared NOOP facade and histories are bitwise-identical to an
+    # uninstrumented build), a repro.obs.ObsConfig, or a kwargs dict for
+    # one.  Deliberately excluded from the checkpoint fingerprint: tracing
+    # may be enabled/disabled across a resume (the trace dir itself is
+    # fingerprint-stamped and append-only, with a `resume` marker).
+    obs: Any = None
 
 
 class RoundPrograms:
@@ -194,7 +203,12 @@ class RoundPrograms:
         self._engines: Dict[int, Any] = {}
         self._client: Dict[Any, Any] = {}
         self._eval: Dict[Any, Any] = {}
+        self._replicate: Dict[Any, Any] = {}
         self._shardings: Dict[Any, Any] = {}
+        # the owning driver swaps in its facade; cache-miss events make
+        # recompilation visible on the timeline (DESIGN.md §13) and are
+        # the ONLY thing obs touches here — programs are identical either way
+        self.obs = NOOP
         method_ = method
 
         def _aggregate(broadcast, uploads):
@@ -217,6 +231,8 @@ class RoundPrograms:
             eng = make_engine(self.backend, cohort, self.shards,
                               mesh=self.mesh, strict=self.strict_shards)
             self._engines[cohort] = eng
+            self.obs.event("engine_create", cat="compile", cohort=cohort,
+                           signature=eng.signature(), backend=self.backend)
         return eng
 
     def _key(self, cohort: int):
@@ -228,7 +244,13 @@ class RoundPrograms:
         (new_states, uploads, metrics).  The cohort gather happens in the
         CohortStore before this program runs (DESIGN.md §12) — a pure
         data movement, so the program sees bitwise the same operands the
-        previous fused ``x[client_ids]`` gather produced."""
+        previous fused ``x[client_ids]`` gather produced.
+
+        Mesh-backend outputs leave this program still client-sharded: the
+        round-boundary all-gather is the separate ``replicate_fn`` program
+        (pure data movement — same values, see
+        ``MeshBackend.replicate``), so the drivers can time it as its own
+        span; compose ``replicate_fn`` before server aggregation."""
         key = self._key(cohort)
         fn = self._client.get(key)
         if fn is None:
@@ -239,11 +261,24 @@ class RoundPrograms:
                 return method.client_round(loss_fn, state, broadcast, batch_seq)
 
             def run(gathered_states, broadcast, batches):
-                return engine.client_phase(one_client, gathered_states,
-                                           broadcast, batches)
+                return engine.client_phase_sharded(one_client, gathered_states,
+                                                   broadcast, batches)
 
             fn = jax.jit(run)
             self._client[key] = fn
+            self.obs.event("program_cache_miss", cat="compile",
+                           program="client", cohort=cohort, signature=key[1])
+        return fn
+
+    def replicate_fn(self, cohort: int):
+        """The round-boundary all-gather as its own program (None for
+        engines whose outputs are born replicated, i.e. vmap)."""
+        key = self._key(cohort)
+        fn = self._replicate.get(key, False)
+        if fn is False:
+            rep = getattr(self.engine(cohort), "replicate", None)
+            fn = None if rep is None else jax.jit(rep)
+            self._replicate[key] = fn
         return fn
 
     def gather_shardings(self, cohort: int, stacked_struct):
@@ -276,10 +311,19 @@ class RoundPrograms:
 
             fn = jax.jit(run)
             self._eval[key] = fn
+            self.obs.event("program_cache_miss", cat="compile",
+                           program="eval", cohort=cohort, signature=key[1])
         return fn
 
 
 _HISTORY_KEYS = ("loss", "acc", "round_time", "sim_time")
+
+# metric-histogram bucket edges (DESIGN.md §13): theta spans Eq. 14's
+# domain [0, pi] in pi/8 steps; beta/loss use fixed decades so histograms
+# from different runs/backends are directly comparable
+_THETA_EDGES = tuple(i * np.pi / 8 for i in range(1, 8))
+_BETA_EDGES = tuple(i / 10 for i in range(1, 10))
+_LOSS_EDGES = (0.01, 0.03, 0.1, 0.3, 1.0, 2.0, 3.0, 5.0, 10.0)
 
 
 class Federation:
@@ -316,6 +360,7 @@ class Federation:
     ):
         self._init_core(method, loss_fn, acc_fn, init_params, data, run_cfg)
         self.availability = availability
+        self._obs_open()
 
     _strict_shards = True
 
@@ -328,6 +373,7 @@ class Federation:
         self.acc_fn = acc_fn
         self.data = data
         self.cfg = run_cfg
+        self.obs = make_obs(run_cfg.obs)
         self.rng = np.random.RandomState(run_cfg.seed)
 
         k = run_cfg.n_clients
@@ -338,6 +384,7 @@ class Federation:
                                       run_cfg.backend, run_cfg.shards,
                                       mesh=run_cfg.mesh,
                                       strict_shards=self._strict_shards)
+        self.programs.obs = self.obs
         # built eagerly: validates backend/shards at construction (§3)
         self.engine = self.programs.engine(self.kprime)
 
@@ -370,24 +417,90 @@ class Federation:
     def client_states(self, tree):
         self.store.load_stacked(tree)
 
+    # -- observability (DESIGN.md §13) ------------------------------------
+
+    def _obs_fingerprint(self) -> dict:
+        """Facets stamped into the trace directory's meta.json.  The
+        checkpoint fingerprint plus the method name: two methods (or two
+        configs) must never append into one timeline."""
+        return {"driver": "sync", "method": self.method.name,
+                **self._run_fingerprint()}
+
+    def _obs_open(self) -> None:
+        if not self.obs.enabled:
+            return
+        self.obs.open(self._obs_fingerprint())
+        self.obs.event("run_start", engine=self.engine.describe(),
+                       rounds=self.cfg.rounds)
+        if getattr(self.store, "promoted", False):
+            # the host store silently spilled to disk-backed memmaps
+            # (capacity threshold, §12) — surface it on the timeline
+            self.obs.event("mmap_promote", store=self.store.describe())
+
+    def _observe_client_metrics(self, metrics) -> None:
+        """Per-client method diagnostics -> histograms: the Gompertz
+        weight beta and its angle theta (recovered host-side from Eq. 14's
+        inverse), and the per-round fraction of personalized clients.
+        Reads already-materialized host values only."""
+        reg = self.obs.metrics
+        if reg is None:
+            return
+        reg.histogram("client.loss", _LOSS_EDGES).observe(
+            np.asarray(metrics["loss"], np.float64))
+        beta = metrics.get("beta") if hasattr(metrics, "get") else None
+        if beta is not None:
+            b = np.asarray(beta, np.float64)
+            reg.histogram("pfedsop.beta", _BETA_EDGES).observe(b)
+            lam = getattr(getattr(self.method, "cfg", None), "lam", None)
+            if lam is not None:
+                reg.histogram("pfedsop.theta", _THETA_EDGES).observe(
+                    theta_from_beta(b, lam))
+        if hasattr(metrics, "get") and metrics.get("personalized") is not None:
+            reg.gauge("pfedsop.personalized_frac").set(
+                float(np.mean(np.asarray(metrics["personalized"], np.float64))))
+
+    def _observe_round(self, t: int, m: dict, dt: float) -> None:
+        reg = self.obs.metrics
+        if reg is not None:
+            reg.counter("rounds").inc()
+            reg.gauge("loss").set(m["loss"])
+            reg.gauge("acc").set(m["acc"])
+            reg.gauge("round_time").set(dt)
+            reg.set_gauges("store", self.store.stats())
+            self.obs.flush_metrics(step=t, sim_time=self.sim_time)
+        self.obs.flush()
+
+    # -- round loop -------------------------------------------------------
+
     def run_round(self):
+        obs = self.obs
         ids = self.rng.choice(self.cfg.n_clients, self.kprime, replace=False)
         batches = self.data.sample_round_batches(self.rng, ids, self.T, self.cfg.batch)
         tests = self.data.client_test_set(ids)
-        gathered = self.store.gather(
+        gathered = obs.timed(
+            "gather", self.store.gather,
             ids, self.programs.gather_shardings(self.kprime, self._store_struct)
         )
-        new_states, uploads, metrics = self.programs.client_fn(self.kprime)(
-            gathered, self.broadcast, batches
-        )
+        out = obs.timed("client", self.programs.client_fn(self.kprime),
+                        gathered, self.broadcast, batches)
+        # round-boundary all-gather: its own program AND its own span —
+        # the phase the mesh-gap analysis needs attributed (§11/§13)
+        rep = self.programs.replicate_fn(self.kprime)
+        if rep is not None:
+            out = obs.timed("all_gather", rep, out)
+        new_states, uploads, metrics = out
         # personalized eval against the pre-update broadcast (the model a
         # client would deploy this round)
-        accs = self.programs.eval_fn(self.kprime)(new_states, self.broadcast, tests)
-        self.broadcast = self.programs.aggregate(self.broadcast, uploads)
+        accs = obs.timed("eval", self.programs.eval_fn(self.kprime),
+                         new_states, self.broadcast, tests)
+        self.broadcast = obs.timed("aggregate", self.programs.aggregate,
+                                   self.broadcast, uploads)
         # write-back after upload (§12): the host store starts the d2h
         # copies here and overlaps them with the next round's host-side
-        # sampling; the device store applies its jitted at[ids].set
-        self.store.scatter(ids, new_states)
+        # sampling; the device store applies its jitted at[ids].set.
+        # sync=False: blocking would serialize that overlap, so the span
+        # measures submit time only.
+        obs.timed("scatter", self.store.scatter, ids, new_states, sync=False)
 
         accs = np.asarray(accs, np.float64)
         self.best_acc[ids] = np.maximum(self.best_acc[ids], accs)
@@ -396,32 +509,41 @@ class Federation:
             self.sim_time += self.availability.sync_round_duration(ids, self.sim_time)
         else:
             self.sim_time += 1.0
+        self._observe_client_metrics(metrics)
         return {
             "loss": float(np.mean(np.asarray(metrics["loss"]))),
             "acc": float(np.mean(accs)),
         }
 
     def run(self, verbose: bool = False):
+        obs = self.obs
         while self._round < self.cfg.rounds:
             t = self._round
+            obs.xla_round_start(t)
             t0 = time.perf_counter()
-            m = self.run_round()
+            with obs.span("round", round=t, sim=self.sim_time):
+                m = self.run_round()
             dt = time.perf_counter() - t0
+            obs.xla_round_end(t)
             self._history["loss"].append(m["loss"])
             self._history["acc"].append(m["acc"])
             self._history["round_time"].append(dt)
             self._history["sim_time"].append(self.sim_time)
             self._round += 1
             if verbose and (t % 10 == 0 or t == self.cfg.rounds - 1):
-                print(
+                obs.log.info(
                     f"[{self.method.name}/{self.engine.name}] round {t:4d} "
-                    f"loss={m['loss']:.4f} acc={m['acc']:.4f} ({dt:.2f}s)"
+                    f"loss={m['loss']:.4f} acc={m['acc']:.4f} ({dt:.2f}s)",
+                    event="round", round=t, loss=m["loss"], acc=m["acc"],
+                    dt=dt,
                 )
+            self._observe_round(t, m, dt)
             if (self.cfg.ckpt_every and self.cfg.ckpt_dir
                     and self._round % self.cfg.ckpt_every == 0):
                 self.save(self.cfg.ckpt_dir)
         history = self._finalize_history()
         history["engine"] = self.engine.describe()
+        obs.close()
         return history
 
     def _finalize_history(self):
@@ -498,6 +620,7 @@ class Federation:
         path = save_checkpoint(ckpt_dir, self._round, self._ckpt_tree(),
                                extra=self._ckpt_extra())
         self.store.save_shards(path)
+        self.obs.event("checkpoint_save", cat="checkpoint", round=self._round)
         return path
 
     def _load_store_shards(self, ckpt_dir, step: int) -> None:
@@ -529,6 +652,8 @@ class Federation:
                                       step=manifest["step"])
         self._restore_core(tree, extra)
         self._load_store_shards(ckpt_dir, manifest["step"])
+        self.obs.event("checkpoint_restore", cat="checkpoint",
+                       round=self._round, step=manifest["step"])
         return self._round
 
     def _restore_core(self, tree, extra):

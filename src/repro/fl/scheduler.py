@@ -53,6 +53,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.fl.availability import AvailabilityModel
+from repro.obs import NOOP
 
 
 class RoundScheduler:
@@ -79,6 +80,11 @@ class RoundScheduler:
         self._heap: List[Tuple[float, int, int, int]] = []
         self._seq = 0
         self.inflight: Dict[int, int] = {}  # client -> pod
+        # observability facade (swapped in by the async driver): a client's
+        # dispatch→completion interval is fully known at dispatch (the
+        # simulator delays only *delivery*), so the per-client sim-time
+        # track is emitted right here (DESIGN.md §13)
+        self.obs = NOOP
 
     # -- dispatch ----------------------------------------------------------
 
@@ -135,12 +141,11 @@ class RoundScheduler:
         for p in range(self.n_pods):
             take = min(self._quota[p] - counts[p], m - pos)
             for i in ids[pos:pos + take].tolist():
-                heapq.heappush(
-                    self._heap,
-                    (t + self.avail.duration(i), self._seq, i, p),
-                )
+                td = t + self.avail.duration(i)
+                heapq.heappush(self._heap, (td, self._seq, i, p))
                 self._seq += 1
                 self.inflight[i] = p
+                self.obs.client_span(i, "inflight", t, td, pod=p)
             pos += take
         assert pos == m, (pos, m, self._quota, counts)
         return ids

@@ -94,9 +94,16 @@ def resolve_impl(impl: str, kernel: str) -> str:
     resolved = "kernel" if backend == "tpu" else "reference"
     if kernel not in _AUTO_LOGGED:
         _AUTO_LOGGED.add(kernel)
-        logger.info(
-            "kernel-dispatch: %s=auto resolved to %r for %s (backend=%s)",
-            knob, resolved, kernel, backend,
+        # routed through the obs structured logger: the stdlib record keeps
+        # its historical logger name + format (pinned by the dispatch tests),
+        # and an open trace additionally gets a structured mirror record
+        from repro.obs import get_obs
+
+        get_obs().log.info(
+            f"kernel-dispatch: {knob}=auto resolved to {resolved!r} for "
+            f"{kernel} (backend={backend})",
+            logger=logger, event="kernel_dispatch",
+            kernel=kernel, knob=knob, impl=resolved, backend=backend,
         )
     return resolved
 
@@ -132,6 +139,26 @@ def current_model_shard() -> Optional[Tuple[str, int]]:
     """(axis_name, n_shards) of the innermost active model-shard context,
     or None outside any mesh-engine body (the common case)."""
     return _MODEL_SHARD_STACK[-1] if _MODEL_SHARD_STACK else None
+
+
+@contextlib.contextmanager
+def kernel_scope(kernel: str, impl: str):
+    """Name a dispatched-kernel launch in profiles (DESIGN.md §13).
+
+    Always wraps tracing in ``jax.named_scope`` so the resolved impl shows
+    up in HLO op names / XLA profiles for free; at ``kernel`` obs level it
+    additionally opens a ``jax.profiler.TraceAnnotation`` so the launch is
+    attributable in a ``--xla-profile`` capture.  Host-side only — the
+    traced computation is unchanged (names, not values).
+    """
+    from repro.obs import LEVEL_KERNEL, get_obs
+
+    label = f"{kernel}[{impl}]"
+    with contextlib.ExitStack() as stack:
+        stack.enter_context(jax.named_scope(label))
+        if get_obs().level >= LEVEL_KERNEL:
+            stack.enter_context(jax.profiler.TraceAnnotation(label))
+        yield
 
 
 def resolve_update_impl(impl: str) -> str:

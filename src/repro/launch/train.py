@@ -27,6 +27,7 @@ from repro.launch import sharding as sh
 from repro.launch import steps as st
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import transformer as tf
+from repro.obs import ObsConfig, make_obs
 from repro.utils.checkpoint import save_checkpoint
 
 
@@ -46,7 +47,21 @@ def main():
                     choices=["auto", "reference", "kernel", "kernel_interpret"],
                     help="model-zoo kernel policy (rmsnorm/flash_gqa, "
                          "DESIGN.md §9); auto = kernel on TPU")
+    ap.add_argument("--trace-dir", default="",
+                    help="structured round trace + Perfetto trace.json export "
+                         "(DESIGN.md §13)")
+    ap.add_argument("--metrics", default="",
+                    help="metrics.jsonl path ('' = <trace-dir>/metrics.jsonl)")
+    ap.add_argument("--obs-level", choices=["off", "round", "phase", "kernel"],
+                    default="phase")
+    ap.add_argument("--xla-profile", type=int, default=-1,
+                    help="round index to wrap in a jax.profiler capture "
+                         "under <trace-dir>/xla (-1 = off)")
+    ap.add_argument("--obs-quiet", action="store_true",
+                    help="suppress stdout progress lines (records still trace)")
     args = ap.parse_args()
+    if args.xla_profile >= 0 and not args.trace_dir:
+        ap.error("--xla-profile requires --trace-dir")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     cfg = cfg.replace(kernel_impl=args.kernel_impl)
@@ -54,7 +69,18 @@ def main():
         raise SystemExit("text archs only in this driver")
     mesh = make_production_mesh() if args.production_mesh else make_host_mesh()
     dsize, msize = mesh.shape["data"], mesh.shape["model"]
-    print(f"mesh {dict(mesh.shape)}, arch {cfg.name}")
+    obs = make_obs(ObsConfig(
+        trace_dir=args.trace_dir, metrics=args.metrics, level=args.obs_level,
+        quiet=args.obs_quiet, xla_profile=args.xla_profile,
+    ) if (args.trace_dir or args.metrics or args.obs_quiet) else None)
+    obs.open(fingerprint={
+        "driver": "launch", "arch": cfg.name, "mesh": dict(mesh.shape),
+        "seed": args.seed, "kernel_impl": args.kernel_impl,
+        "seq_len": args.seq_len, "micro_batch": args.micro_batch,
+        "local_iters": args.local_iters,
+    })
+    obs.log.info(f"mesh {dict(mesh.shape)}, arch {cfg.name}",
+                 event="run_start", mesh=dict(mesh.shape), arch=cfg.name)
 
     shape = InputShape("custom", args.seq_len, args.micro_batch * args.local_iters, "train")
     step = st.make_train_step(cfg, shape)
@@ -80,12 +106,26 @@ def main():
     with mesh:
         for r in range(args.rounds):
             t0 = time.perf_counter()
-            bs = [next(it) for _ in range(args.local_iters)]
-            batches = jax.tree.map(lambda *xs: jnp.stack(xs)[None], *bs)  # (1,T,b,S)
-            state, global_delta, loss = jit_step(state, global_delta, batches)
-            print(f"round {r} loss={float(loss):.4f} ({time.perf_counter()-t0:.1f}s)")
+            obs.xla_round_start(r)
+            with obs.span("round", round=r):
+                bs = [next(it) for _ in range(args.local_iters)]
+                batches = jax.tree.map(lambda *xs: jnp.stack(xs)[None], *bs)  # (1,T,b,S)
+                state, global_delta, loss = obs.timed(
+                    "train_step", jit_step, state, global_delta, batches,
+                    round=r)
+            obs.xla_round_end(r)
+            dt = time.perf_counter() - t0
+            obs.log.info(f"round {r} loss={float(loss):.4f} ({dt:.1f}s)",
+                         event="round", round=r, loss=float(loss),
+                         round_time=dt)
+            if obs.metrics is not None:
+                obs.metrics.gauge("train.loss").set(float(loss))
+                obs.metrics.gauge("train.round_time").set(dt)
+                obs.flush_metrics(step=r)
+            obs.flush()
             if args.checkpoint_dir:
                 save_checkpoint(args.checkpoint_dir, r, state)
+    obs.close()
     assert np.isfinite(float(loss))
     print("OK")
 

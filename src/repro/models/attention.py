@@ -93,11 +93,13 @@ def attention_fwd(p, cfg, x, positions, window, rope_base, q_block=512):
 
     impl = resolve_impl(getattr(cfg, "kernel_impl", "reference"), "flash_gqa")
     if impl != "reference":
+        from repro.kernels.dispatch import kernel_scope
         from repro.kernels.flash_gqa.ops import flash_gqa
 
-        o = flash_gqa(q, k, v, window=window, softcap=cfg.attn_softcap,
-                      bq=q_block, bk=q_block,
-                      interpret=impl == "kernel_interpret")
+        with kernel_scope("flash_gqa", impl):
+            o = flash_gqa(q, k, v, window=window, softcap=cfg.attn_softcap,
+                          bq=q_block, bk=q_block,
+                          interpret=impl == "kernel_interpret")
         return jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
 
     qb = min(q_block, s)

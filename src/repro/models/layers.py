@@ -43,10 +43,12 @@ def rmsnorm(p, x, eps=1e-6, impl="reference"):
     """
     impl = resolve_impl(impl, "rmsnorm")
     if impl != "reference":
+        from repro.kernels.dispatch import kernel_scope
         from repro.kernels.rmsnorm.ops import rmsnorm as rmsnorm_kernel
 
-        return rmsnorm_kernel(x, p["scale"], eps=eps,
-                              interpret=impl == "kernel_interpret")
+        with kernel_scope("rmsnorm", impl):
+            return rmsnorm_kernel(x, p["scale"], eps=eps,
+                                  interpret=impl == "kernel_interpret")
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)

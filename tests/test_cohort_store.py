@@ -125,7 +125,7 @@ class TestGatherScatter:
         new = {"w": np.full((1, 2, 3), 5.0, np.float32),
                "nest": {"b": np.asarray([2.0], np.float32)}}
         s.scatter(np.asarray([0]), new)
-        assert 0 not in s._cache and 1 in s._cache
+        assert 0 not in s._lru and 1 in s._lru
         np.testing.assert_array_equal(_rows(s, [0])["w"][0], 5.0)
         # next gather re-fetches the written value through the cache path
         np.testing.assert_array_equal(
@@ -139,10 +139,10 @@ class TestLRUCache:
         s.gather(np.asarray([1]))
         s.gather(np.asarray([0]))  # touch 0: now 1 is the LRU entry
         s.gather(np.asarray([2]))  # evicts 1, not 0
-        assert list(s._cache) == [0, 2]
+        assert list(s._lru) == [0, 2]
         assert s.stats()["cache_evictions"] == 1
         s.gather(np.asarray([1]))  # miss: evicts 0 (front of [0, 2])
-        assert list(s._cache) == [2, 1]
+        assert list(s._lru) == [2, 1]
 
     def test_hit_accounting_and_h2d_savings(self):
         s = _host(cache_clients=4)
@@ -170,7 +170,7 @@ class TestLRUCache:
         s = _host(cache_clients=2)
         new = {"w": jnp.zeros((1, 2, 3)), "nest": {"b": jnp.asarray([1.0])}}
         s.scatter(np.asarray([5]), new)
-        assert 5 in s._cache
+        assert 5 in s._lru
         s.gather(np.asarray([5]))
         assert s.stats()["cache_hits"] == 1
 
@@ -181,7 +181,7 @@ class TestLRUCache:
             lambda _: jax.sharding.SingleDeviceSharding(dev), PROTO)
         s = _host(cache_clients=4)
         s.gather(np.asarray([0, 1]), shardings)
-        assert not s._cache
+        assert not s._lru
         assert s.stats()["cache_misses"] == 0
 
 

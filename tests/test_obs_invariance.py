@@ -1,0 +1,92 @@
+"""The §13 hard contract: observability NEVER changes traced values.
+
+For every engine backend x driver combination — {vmap, shard_map,
+multi-pod mesh} x {sync, async} — the full training history of a traced
+run (phase level, metrics on) must be bitwise identical to the untraced
+run, except ``round_time`` (wall clock is the one documented cost of the
+``timed`` block-until-ready boundaries).  Subprocess on a forced
+8-device mesh, like tests/test_multipod.py: the mesh backend needs the
+device count forced before jax initialises.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_INVARIANCE_SCRIPT = textwrap.dedent(
+    """
+    import tempfile
+    from pathlib import Path
+
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+
+    from repro.configs.resnet_cifar import SMALL_CNN as CFG
+    from repro.core.baselines import METHODS
+    from repro.data import (FederatedData, dirichlet_partition,
+                            make_class_conditional_images)
+    from repro.fl import AsyncFederation, Federation, FLRunConfig
+    from repro.fl.runtime import masked_accuracy
+    from repro.models import cnn
+    from repro.obs import ObsConfig, read_events, read_metrics
+
+    images, labels = make_class_conditional_images(600, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+    tmp = Path(tempfile.mkdtemp())
+
+    def run(backend, mesh, driver, obs):
+        cfg = FLRunConfig(n_clients=8, participation=0.5, rounds=2, batch=8,
+                          local_iters=2, seed=1, backend=backend, mesh=mesh,
+                          update_impl="kernel_interpret", obs=obs)
+        cls = AsyncFederation if driver == "async" else Federation
+        return cls(METHODS["pfedsop"](), loss, acc, params, data, cfg).run()
+
+    for backend, mesh in [("vmap", ""), ("shard_map", ""),
+                          ("mesh", "pods:2x2x2")]:
+        for driver in ["sync", "async"]:
+            tdir = tmp / f"{backend}_{driver}"
+            h_off = run(backend, mesh, driver, None)
+            h_on = run(backend, mesh, driver,
+                       ObsConfig(trace_dir=str(tdir), level="phase",
+                                 quiet=True))
+            for key in h_off:
+                if key == "round_time":
+                    continue
+                assert h_off[key] == h_on[key], (
+                    backend, driver, key, h_off[key], h_on[key])
+            # the traced run actually traced: spans + per-round metrics
+            evs = read_events(tdir)
+            assert any(e.get("k") == "span" and e["name"] == "client"
+                       for e in evs), (backend, driver)
+            snaps = read_metrics(tdir / "metrics.jsonl")
+            assert len(snaps) == 2, (backend, driver, len(snaps))
+            assert (tdir / "trace.json").exists()
+            print(f"INVARIANT_OK {backend}/{driver}")
+    print("ALL_INVARIANT_OK")
+    """
+)
+
+
+def test_traced_equals_untraced_all_backends_forced_8_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", _INVARIANCE_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    for backend in ["vmap", "shard_map", "mesh"]:
+        for driver in ["sync", "async"]:
+            assert f"INVARIANT_OK {backend}/{driver}" in res.stdout, res.stdout
+    assert "ALL_INVARIANT_OK" in res.stdout
