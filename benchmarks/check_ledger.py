@@ -2,8 +2,9 @@
 
 Compares a freshly emitted ``experiments/bench/BENCH_<suite>.json`` against
 the committed trajectory under ``benchmarks/ledger/`` and fails when any
-``rounds_per_sec`` entry drops below ``--min-ratio`` (default 0.3) of the
-ledger value.  The threshold is deliberately loose: CI boxes are noisy and
+throughput entry (``rounds_per_sec`` — federation suites — or
+``tokens_per_sec`` — the model fwd/bwd suites) drops below ``--min-ratio``
+(default 0.3) of the ledger value.  The threshold is deliberately loose: CI boxes are noisy and
 the gate exists to catch order-of-magnitude regressions (an accidental
 de-jit, a cache that stopped caching, a gather gone quadratic), not
 percent-level drift.  Entries present in only one file are reported but
@@ -32,8 +33,16 @@ LEDGER = REPO / "benchmarks" / "ledger"
 FRESH = REPO / "experiments" / "bench"
 
 
+THROUGHPUT_KEYS = ("rounds_per_sec", "tokens_per_sec")
+
+
 def _throughputs(payload: dict, prefix=()) -> dict:
-    """Flatten metrics to {dotted.path: rounds_per_sec}."""
+    """Flatten metrics to {dotted.path: throughput}.
+
+    A node may carry at most one throughput key, so the dotted path stays
+    unambiguous; the unit is implied by the suite (r/s for federation
+    suites, tok/s for model-fwd/model-bwd).
+    """
     out = {}
     node = payload.get("metrics", payload)
     stack = [(prefix, node)]
@@ -42,7 +51,7 @@ def _throughputs(payload: dict, prefix=()) -> dict:
         if not isinstance(cur, dict):
             continue
         for key, val in cur.items():
-            if key == "rounds_per_sec" and isinstance(val, (int, float)):
+            if key in THROUGHPUT_KEYS and isinstance(val, (int, float)):
                 out[".".join(path)] = float(val)
             elif isinstance(val, dict):
                 stack.append((path + (str(key),), val))
@@ -75,14 +84,14 @@ def main() -> int:
     for key in sorted(set(ledger) | set(fresh)):
         if key not in ledger:
             print(f"  new entry (no ledger baseline): {key} "
-                  f"{fresh[key]:.3f} r/s")
+                  f"{fresh[key]:.3f}")
             continue
         if key not in fresh:
             print(f"  ledger entry absent from fresh run: {key}")
             continue
         ratio = fresh[key] / ledger[key] if ledger[key] else float("inf")
         status = "OK" if ratio >= args.min_ratio else "REGRESSION"
-        print(f"  {status:>10}  {key}: {fresh[key]:.3f} r/s "
+        print(f"  {status:>10}  {key}: {fresh[key]:.3f} "
               f"(ledger {ledger[key]:.3f}, ratio {ratio:.2f})")
         if ratio < args.min_ratio:
             failures.append(key)

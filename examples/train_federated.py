@@ -129,6 +129,23 @@ def main():
                          "over 2 pods with model=2 tensor shards each "
                          "(8 devices; run under XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8 on CPU)")
+    ap.add_argument("--output-sharding", choices=["replicated", "sharded"],
+                    default="replicated",
+                    help="round-boundary output layout (DESIGN.md §11): "
+                         "'replicated' all-gathers engine outputs at the "
+                         "round boundary (the seed contract); 'sharded' "
+                         "keeps them client-sharded at rest and lowers "
+                         "Eq. 13 aggregation into the sharded program — "
+                         "bitwise-identical histories, no all-gather span. "
+                         "shard_map/mesh backends only")
+    ap.add_argument("--grad-chunks", type=int, default=1,
+                    help="gradient chunk count of each local SGD step "
+                         "(DESIGN.md §11): the per-step gradient is the "
+                         "canonical halving-tree mean over this many equal "
+                         "batch chunks; on a mesh whose data-axis size "
+                         "matches, chunks run one-per-device over the data "
+                         "axis with bitwise-identical histories (1 = plain "
+                         "value_and_grad, the seed semantics)")
     ap.add_argument("--update-impl", default="",
                     choices=["", "auto", "reference", "kernel", "kernel_interpret"],
                     help="pFedSOP round-start update impl (DESIGN.md §9): "
@@ -228,6 +245,10 @@ def main():
         ap.error("--buffer-size/--concurrency only apply to --mode async "
                  "(the sync driver has no aggregation buffer or dispatch "
                  "pipeline), so they would be silently ignored")
+    if args.output_sharding == "sharded" and args.backend == "vmap":
+        ap.error("--output-sharding sharded needs a client-sharding backend "
+                 "(--backend shard_map or mesh); vmap outputs are born "
+                 "replicated, so the flag would be a silent no-op")
     if args.mesh and args.backend != "mesh":
         ap.error("--mesh only applies to --backend mesh (the other backends "
                  "fix their own layout), so it would be silently ignored")
@@ -307,6 +328,7 @@ def main():
         n_clients=args.clients, participation=args.participation,
         rounds=args.rounds, batch=args.batch, seed=args.seed,
         backend=args.backend, shards=args.shards, mesh=args.mesh,
+        output_sharding=args.output_sharding, grad_chunks=args.grad_chunks,
         update_impl=args.update_impl,
         ckpt_every=args.ckpt_every,
         async_cfg=async_cfg,

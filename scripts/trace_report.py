@@ -107,6 +107,11 @@ def _last_snapshot(run):
 
 
 def _fmt_hist(name, h, width=28):
+    if not h.get("count"):
+        # registered but never observed (e.g. a sharded-output run records
+        # no replicate-phase histogram): min/max are None — render, don't
+        # crash on the float format
+        return [f"  {name}: n=0 mean=— min=— max=—"]
     lines = [f"  {name}: n={h['count']} mean={h['sum'] / max(h['count'], 1):.4g} "
              f"min={h['min']:.4g} max={h['max']:.4g}"]
     edges = h["edges"]
@@ -193,16 +198,18 @@ def print_comparison(reps):
     """Side-by-side warm phase means — the cross-backend gap, attributed."""
     all_phases = set()
     for rep in reps:
-        all_phases |= set(rep["phases"])
+        all_phases |= set(rep.get("phases", {}))
     names = ([n for n in PHASE_ORDER if n in all_phases]
              + sorted(all_phases - set(PHASE_ORDER)))
     cols = [Path(rep["trace_dir"]).name[:22] for rep in reps]
     print("\n== phase comparison (warm mean ms) ==")
     print(f"  {'phase':>16} " + " ".join(f"{c:>22}" for c in cols))
     for name in names:
+        # a run may simply not record a phase (sharded-output runs have no
+        # all_gather/replicate span) — render "—", never KeyError
         row = []
         for rep in reps:
-            st = rep["phases"].get(name)
+            st = rep.get("phases", {}).get(name)
             row.append(f"{st['warm_mean_us'] / 1e3:>22.2f}" if st
                        else f"{'—':>22}")
         print(f"  {name:>16} " + " ".join(row))

@@ -19,9 +19,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import pfedsop as pf
+from repro.optim.reduce import cohort_mean, cohort_size, cohort_sum
+from repro.optim.sgd import chunked_value_and_grad
 from repro.utils.pytree import tree_scale, tree_sub, tree_zeros_like
 
 Pytree = Any
+
+
+def _mean_like(uploads):
+    """Eq.-13-style mean over the stacked client axis, cast back to the
+    leaf dtype.  ``cohort_mean`` (repro.optim.reduce) is canonically
+    associated and client-shard-aware, so the FedAvg-family aggregation
+    is bitwise identical between the replicated program, the §11 sharded
+    aggregation program, and the async host-stacked flush."""
+    return jax.tree.map(
+        lambda u, m: m.astype(u.dtype), uploads, cohort_mean(uploads)
+    )
 
 
 @runtime_checkable
@@ -133,7 +146,7 @@ def local_train(
             loss = loss + 0.5 * mu * sq
         return loss
 
-    grad_fn = jax.value_and_grad(full_loss)
+    grad_fn = chunked_value_and_grad(full_loss)
 
     def step(p, batch):
         loss, g = grad_fn(p, batch)
@@ -174,7 +187,7 @@ class FedAvg:
         return state, trained, {"loss": loss}
 
     def server_update(self, broadcast, uploads):
-        return jax.tree.map(lambda u: jnp.mean(u.astype(jnp.float32), 0).astype(u.dtype), uploads)
+        return _mean_like(uploads)
 
     def server_update_stale(self, broadcast, uploads, staleness):
         """Default staleness hook: normalized polynomial discount wrapping
@@ -293,7 +306,7 @@ class FedRep(FedAvg):
 
     def server_update(self, broadcast, uploads):
         # aggregate everything; the head rows are overwritten locally anyway
-        return jax.tree.map(lambda u: jnp.mean(u.astype(jnp.float32), 0).astype(u.dtype), uploads)
+        return _mean_like(uploads)
 
     def eval_params(self, state, broadcast):
         head_mask, _ = self._masks(broadcast)
@@ -424,7 +437,7 @@ class Scaffold(FedAvg):
             lambda ci, cg: (cg.astype(jnp.float32) - ci.astype(jnp.float32)),
             c_i, c,
         )
-        grad_fn = jax.value_and_grad(loss_fn)
+        grad_fn = chunked_value_and_grad(loss_fn)
 
         def step(p, batch):
             loss, g = grad_fn(p, batch)
@@ -450,13 +463,12 @@ class Scaffold(FedAvg):
         return {"c_i": new_c_i}, {"y": final, "dc": dc}, {"loss": jnp.mean(losses)}
 
     def server_update(self, broadcast, uploads):
-        mean = lambda u: jax.tree.map(
-            lambda v: jnp.mean(v.astype(jnp.float32), 0), u)
         new_x = jax.tree.map(
-            lambda old, m: m.astype(old.dtype), broadcast["x"], mean(uploads["y"]))
+            lambda old, m: m.astype(old.dtype),
+            broadcast["x"], cohort_mean(uploads["y"]))
         new_c = jax.tree.map(
             lambda cg, m: (cg.astype(jnp.float32) + m).astype(cg.dtype),
-            broadcast["c"], mean(uploads["dc"]))
+            broadcast["c"], cohort_mean(uploads["dc"]))
         return {"x": new_x, "c": new_c}
 
     def eval_params(self, state, broadcast):
@@ -484,15 +496,19 @@ class FedExP(FedAvg):
         return state, delta, {"loss": loss}
 
     def server_update(self, broadcast, uploads):
-        mean_d = jax.tree.map(lambda v: jnp.mean(v, 0), uploads)
+        # every cohort reduction is canonically associated AND client-
+        # shard-aware: the mean, the per-client sqnorm sum (locally
+        # vmapped over this shard's rows, combined in shard order) and
+        # K' itself all see the full cohort under a §11 sharded program
+        mean_d = cohort_mean(uploads)
         from repro.utils.pytree import tree_sqnorm
 
+        n_local = jax.tree.leaves(uploads)[0].shape[0]
         per_client_sq = jax.vmap(lambda i: tree_sqnorm(
-            jax.tree.map(lambda v: v[i], uploads)))(
-                jnp.arange(jax.tree.leaves(uploads)[0].shape[0]))
-        kprime = jax.tree.leaves(uploads)[0].shape[0]
+            jax.tree.map(lambda v: v[i], uploads)))(jnp.arange(n_local))
+        kprime = cohort_size(n_local)
         mean_sq = tree_sqnorm(mean_d)
-        eta_g = jnp.maximum(1.0, jnp.sum(per_client_sq) /
+        eta_g = jnp.maximum(1.0, cohort_sum(per_client_sq) /
                             (2.0 * kprime * (mean_sq + self.eps)))
         return jax.tree.map(
             lambda x, d: (x.astype(jnp.float32) - eta_g * d).astype(x.dtype),

@@ -310,8 +310,15 @@ def local_sgd_delta(
 
     delta_i = (x0 - xT)/eta2 = sum of the per-iteration stochastic gradients
     (Eq. 11/12 — verified by test against an explicit gradient sum).
+
+    The per-step gradient dispatches through ``chunked_value_and_grad``
+    (DESIGN.md §11): plain ``jax.value_and_grad`` at the default
+    ``grad_chunks = 1``, the canonical chunk-tree reduction otherwise —
+    including the data-axis-sharded layout inside a mesh engine body.
     """
-    grad_fn = jax.value_and_grad(loss_fn)
+    from repro.optim.sgd import chunked_value_and_grad
+
+    grad_fn = chunked_value_and_grad(loss_fn)
 
     def step(p, batch):
         loss, g = grad_fn(p, batch)
@@ -367,8 +374,17 @@ def client_round(
 
 
 def server_aggregate(deltas: Pytree) -> Pytree:
-    """Eq. 13: mean over the client axis (leading axis of every leaf)."""
-    return jax.tree.map(lambda d: jnp.mean(d.astype(jnp.float32), axis=0), deltas)
+    """Eq. 13: mean over the client axis (leading axis of every leaf).
+
+    Routed through the canonically associated ``cohort_mean`` (DESIGN.md
+    §11) so the replicated aggregation program, the sharded-at-rest
+    program (where this traces inside a ``client_shard_axis`` context and
+    the leading axis is the shard-local cohort slice) and the async
+    driver's host-stacked flush all produce bit-identical means.
+    """
+    from repro.optim.reduce import cohort_mean
+
+    return cohort_mean(deltas)
 
 
 # ---------------------------------------------------------------------------

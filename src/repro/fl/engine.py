@@ -53,7 +53,11 @@ except ImportError:
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.dispatch import model_shard_axis
+from repro.kernels.dispatch import (
+    client_shard_axis,
+    data_shard_axis,
+    model_shard_axis,
+)
 from repro.launch.mesh import MeshSpec, is_auto_clients, parse_mesh, resolve_mesh
 from repro.launch.sharding import client_stacked_pspecs
 
@@ -204,11 +208,19 @@ class MeshBackend:
 
     name = "mesh"
 
-    def __init__(self, kprime: int, spec: MeshSpec, strict: bool = True):
+    def __init__(self, kprime: int, spec: MeshSpec, strict: bool = True,
+                 data_chunks: int = 0):
         self.kprime = kprime
         self.spec = spec
         self.client_sharded = resolve_client_split(kprime, spec, strict)
         self.mesh = resolve_mesh(spec)
+        # FLRunConfig.grad_chunks, threaded through make_engine: when it
+        # equals the mesh's data-axis size, the client phase shards the
+        # per-client batch over the data axis and each device computes its
+        # gradient *chunk* (optim.sgd.chunked_value_and_grad) — same
+        # chunk-tree semantics as the in-body path, so histories stay
+        # bitwise vs data=1 (DESIGN.md §11).
+        self.data_chunks = int(data_chunks)
 
     @property
     def client_shards(self) -> int:
@@ -226,7 +238,11 @@ class MeshBackend:
     def signature(self) -> str:
         """Engine layout id (RoundPrograms cache key, DESIGN.md §11)."""
         sig = self.spec.signature()
-        return sig if self.client_sharded else sig + "|cohort-replicated"
+        if not self.client_sharded:
+            sig += "|cohort-replicated"
+        if self.data_chunks > 1:
+            sig += f"|data-chunks={self.data_chunks}"
+        return sig
 
     def _in_specs(self, tree):
         caxis = self.spec.client_axis if self.client_sharded else None
@@ -234,6 +250,32 @@ class MeshBackend:
             tree, caxis, model_axis=self.spec.model_axis,
             msize=self.spec.model_size,
         )
+
+    def _data_split(self, batches) -> bool:
+        """Whether this call's batch tree shards over the data axis.
+
+        Engages only when the run-level chunk count equals the data-axis
+        size (the local slice must BE one semantic chunk) and every leaf
+        carries a stacked (client, step, batch, ...) layout whose batch
+        dim (index 2) splits evenly.  Decided per trace from static
+        shapes, so a non-dividing batch (e.g. the multipod bench's 25)
+        falls back to the in-body chunk path with identical numbers.
+        """
+        dsize = self.spec.data_size
+        if (self.spec.data_axis is None or dsize <= 1
+                or self.data_chunks != dsize):
+            return False
+        leaves = jax.tree.leaves(batches)
+        return bool(leaves) and all(
+            x.ndim >= 3 and x.shape[2] % dsize == 0 for x in leaves
+        )
+
+    def _batch_specs(self, tree):
+        """In-specs for a data-sharded batch tree: client axis on the
+        stacked dim, data axis on the per-step batch dim (index 2)."""
+        caxis = self.spec.client_axis if self.client_sharded else None
+        daxis = self.spec.data_axis
+        return jax.tree.map(lambda _: P(caxis, None, daxis), tree)
 
     def _gather_model(self, tree, specs):
         """All-gather any model-sharded dims so the per-client compute sees
@@ -256,8 +298,15 @@ class MeshBackend:
 
         return jax.tree.map(gather, tree, specs)
 
-    def _sharded(self, fn, *in_trees, broadcast, replicated: bool = True):
-        specs = tuple(self._in_specs(t) for t in in_trees)
+    def _sharded(self, fn, *in_trees, broadcast, replicated: bool = True,
+                 data_tree: bool = False):
+        # data_tree: the LAST in_tree is a stacked batch tree eligible for
+        # data-axis sharding (the client phase; never eval/test sets)
+        data_split = data_tree and self._data_split(in_trees[-1])
+        specs = [self._in_specs(t) for t in in_trees]
+        if data_split:
+            specs[-1] = self._batch_specs(in_trees[-1])
+        specs = tuple(specs)
         caxis = self.spec.client_axis if self.client_sharded else None
         out_spec = P(caxis) if caxis else P()
 
@@ -274,10 +323,13 @@ class MeshBackend:
         # Safe here — outputs are re-constrained to replicated at the round
         # boundary (``replicate``), so the check would not tighten anything.
         msize = self.spec.model_size
-        ctx = (model_shard_axis(self.spec.model_axis, msize)
-               if self.spec.model_axis is not None and msize > 1
-               else contextlib.nullcontext())
-        with ctx:
+        with contextlib.ExitStack() as ctx:
+            if self.spec.model_axis is not None and msize > 1:
+                ctx.enter_context(
+                    model_shard_axis(self.spec.model_axis, msize))
+            if data_split:
+                ctx.enter_context(
+                    data_shard_axis(self.spec.data_axis, self.spec.data_size))
             out = shard_map(
                 local,
                 mesh=self.mesh,
@@ -312,21 +364,57 @@ class MeshBackend:
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
 
     def client_phase(self, one_client, gathered_states, broadcast, batches):
-        return self._sharded(one_client, gathered_states, batches, broadcast=broadcast)
+        return self._sharded(one_client, gathered_states, batches,
+                             broadcast=broadcast, data_tree=True)
 
     def client_phase_sharded(self, one_client, gathered_states, broadcast, batches):
         """Client phase WITHOUT the round-boundary all-gather: outputs stay
         client-sharded (P(caxis)); callers compose ``replicate`` before
         aggregation.  The drivers use this factored pair so the all-gather
-        is attributable as its own trace span (DESIGN.md §13)."""
+        is attributable as its own trace span (DESIGN.md §13) — and so the
+        §11 sharded-at-rest round loop can drop it entirely, feeding the
+        pod-sharded outputs straight into ``aggregate_phase``."""
         return self._sharded(one_client, gathered_states, batches,
-                             broadcast=broadcast, replicated=False)
+                             broadcast=broadcast, replicated=False,
+                             data_tree=True)
+
+    def aggregate_phase(self, fn, broadcast, *upload_trees):
+        """Server aggregation lowered into the sharded program (§11).
+
+        ``fn(broadcast, *uploads) -> new_broadcast`` is the method's
+        ``server_update``, traced inside a shard_map whose upload in-specs
+        match ``client_phase_sharded``'s out-specs exactly (client axis on
+        dim 0 of every leaf) — no resharding between the phases.  The body
+        announces ``client_shard_axis``, so the cohort reductions inside
+        ``fn`` (``repro.optim.reduce.cohort_mean``/``cohort_sum``) combine
+        shard-local halving-tree partials in shard order: bitwise equal to
+        the replicated program by the ordered-decomposition argument in
+        ``repro.optim.reduce``.  Output replicates (every device computes
+        the identical new broadcast from the gathered partials).
+        """
+        caxis = self.spec.client_axis
+        csize = self.spec.client_size
+        specs = tuple(
+            jax.tree.map(lambda _: P(caxis), t) for t in upload_trees
+        )
+
+        def local(broadcast_, *local_trees):
+            with client_shard_axis(caxis, csize):
+                return fn(broadcast_, *local_trees)
+
+        return shard_map(
+            local,
+            mesh=self.mesh,
+            in_specs=(P(),) + specs,
+            out_specs=P(),
+            check_rep=False,
+        )(broadcast, *upload_trees)
 
     def eval_phase(self, one_eval, states, broadcast, test_sets):
         return self._sharded(one_eval, states, test_sets, broadcast=broadcast)
 
     def describe(self):
-        return {
+        out = {
             "backend": self.name,
             "mesh": self.spec.signature(),
             "shards": self.client_shards,
@@ -334,6 +422,9 @@ class MeshBackend:
             "model_shards": self.spec.model_size,
             "devices": [str(d) for d in self.mesh.devices.flat],
         }
+        if self.data_chunks > 1:
+            out["data_chunks"] = self.data_chunks
+        return out
 
 
 class ShardMapBackend(MeshBackend):
@@ -343,9 +434,10 @@ class ShardMapBackend(MeshBackend):
 
     name = "shard_map"
 
-    def __init__(self, kprime: int, shards: int = 0):
+    def __init__(self, kprime: int, shards: int = 0, data_chunks: int = 0):
         self.shards = resolve_shards(kprime, len(jax.devices()), shards)
-        super().__init__(kprime, MeshSpec.clients(self.shards, CLIENT_AXIS))
+        super().__init__(kprime, MeshSpec.clients(self.shards, CLIENT_AXIS),
+                         data_chunks=data_chunks)
 
     def describe(self):
         return {
@@ -360,7 +452,8 @@ BACKENDS = ("vmap", "shard_map", "mesh")
 
 def make_engine(backend: str, kprime: int, shards: int = 0,
                 mesh: Union[str, MeshSpec, None] = None,
-                strict: bool = True) -> FederationEngine:
+                strict: bool = True,
+                data_chunks: int = 0) -> FederationEngine:
     """Engine factory used by ``Federation`` (selected via FLRunConfig).
 
     ``mesh`` (a spec string for ``repro.launch.mesh.parse_mesh``, or a
@@ -368,6 +461,9 @@ def make_engine(backend: str, kprime: int, shards: int = 0,
     elsewhere — like ``shards``, a layout request must never be silently
     ignored.  ``strict=False`` (the async driver's micro-cohorts) lets a
     non-divisor cohort fall back instead of erroring (§3/§11).
+    ``data_chunks`` threads ``FLRunConfig.grad_chunks`` to the mesh engines
+    (the data-axis local-SGD layout, §11); the vmap backend computes its
+    chunks in-body via the dispatch context, so it takes no engine knob.
     """
     if backend == "vmap":
         if shards or mesh:
@@ -388,7 +484,7 @@ def make_engine(backend: str, kprime: int, shards: int = 0,
         # divisor) instead of erroring
         if not strict and shards and kprime % shards:
             shards = 0
-        return ShardMapBackend(kprime, shards)
+        return ShardMapBackend(kprime, shards, data_chunks=data_chunks)
     if backend == "mesh":
         if shards:
             raise ValueError(
@@ -405,5 +501,6 @@ def make_engine(backend: str, kprime: int, shards: int = 0,
         if is_auto_clients(spec):
             spec = MeshSpec.clients(
                 resolve_shards(kprime, len(jax.devices())), CLIENT_AXIS)
-        return MeshBackend(kprime, spec, strict=strict)
+        return MeshBackend(kprime, spec, strict=strict,
+                           data_chunks=data_chunks)
     raise ValueError(f"unknown FL backend {backend!r}; choose from {BACKENDS}")

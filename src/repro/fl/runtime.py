@@ -42,7 +42,8 @@ from repro.core.pfedsop import theta_from_beta
 from repro.data.federated import FederatedData
 from repro.fl.cohort_store import make_store
 from repro.fl.engine import make_engine
-from repro.kernels.dispatch import resolve_update_impl
+from repro.kernels.dispatch import grad_chunk_count, resolve_update_impl
+from repro.optim.reduce import is_pow2
 from repro.obs import NOOP, make_obs
 from repro.utils.checkpoint import (
     load_checkpoint,
@@ -122,6 +123,33 @@ class FLRunConfig:
     # production mesh) shards the participating-client cohort; rejected
     # for other backends so a layout request is never silently ignored.
     mesh: str = ""
+    # Round-boundary output layout (DESIGN.md §11): "replicated" keeps the
+    # seed contract — engine outputs leave the client phase fully
+    # replicated (an explicit all-gather span) and server aggregation runs
+    # over the replicated cohort.  "sharded" opts out of that all-gather
+    # on the mesh engines: outputs stay client-sharded at rest (P over the
+    # client-role axis), the store scatter/offload consumes the sharded
+    # rows, and Eq. 13's mean lowers into a sharded aggregation program
+    # whose cohort reductions combine per-shard halving-tree partials in
+    # shard order (repro.optim.reduce) — bitwise identical histories to
+    # "replicated", asserted in tests/test_output_sharding.py.  Engages
+    # per cohort when the client split is active with a power-of-two shard
+    # count (the tree-decomposition condition); other cohorts (e.g. async
+    # micro-cohorts that fell back to cohort-replicated) keep the
+    # replicated path.  Rejected for backend="vmap", whose outputs are
+    # born replicated.  Deliberately NOT in the checkpoint fingerprint:
+    # it is a layout knob, not a semantics knob.
+    output_sharding: str = "replicated"
+    # Gradient chunk count of each local SGD step (DESIGN.md §11): the
+    # step's gradient is DEFINED as the canonical halving-tree mean over
+    # ``grad_chunks`` equal batch chunks (optim.sgd.chunked_value_and_grad).
+    # 1 = plain value_and_grad (the seed semantics).  On a mesh whose
+    # data-axis size equals this count, the engine shards the per-client
+    # batch over the data axis and each device computes one chunk — same
+    # numbers, bitwise, by construction.  Changing it CHANGES THE
+    # SEMANTICS of training (a different, equally valid gradient), so it
+    # IS part of the checkpoint fingerprint.
+    grad_chunks: int = 1
     # Round-start update impl override (repro.kernels.dispatch.UPDATE_IMPLS;
     # DESIGN.md §9).  "" = defer to the method's own config (e.g.
     # PFedSOPConfig.update_impl); a non-empty value is pushed into the
@@ -192,7 +220,8 @@ class RoundPrograms:
     """
 
     def __init__(self, method, loss_fn, acc_fn, backend: str, shards: int = 0,
-                 mesh: str = "", strict_shards: bool = True):
+                 mesh: str = "", strict_shards: bool = True,
+                 output_sharding: str = "replicated", grad_chunks: int = 1):
         self.method = method
         self.loss_fn = loss_fn
         self.acc_fn = acc_fn
@@ -200,11 +229,14 @@ class RoundPrograms:
         self.shards = shards
         self.mesh = mesh
         self.strict_shards = strict_shards
+        self.output_sharding = output_sharding
+        self.grad_chunks = grad_chunks
         self._engines: Dict[int, Any] = {}
         self._client: Dict[Any, Any] = {}
         self._eval: Dict[Any, Any] = {}
         self._replicate: Dict[Any, Any] = {}
         self._shardings: Dict[Any, Any] = {}
+        self._aggregate_sharded: Dict[Any, Any] = {}
         # the owning driver swaps in its facade; cache-miss events make
         # recompilation visible on the timeline (DESIGN.md §13) and are
         # the ONLY thing obs touches here — programs are identical either way
@@ -229,7 +261,8 @@ class RoundPrograms:
         if eng is None:
             # micro-cohort split fallbacks live in make_engine(strict=False)
             eng = make_engine(self.backend, cohort, self.shards,
-                              mesh=self.mesh, strict=self.strict_shards)
+                              mesh=self.mesh, strict=self.strict_shards,
+                              data_chunks=self.grad_chunks)
             self._engines[cohort] = eng
             self.obs.event("engine_create", cat="compile", cohort=cohort,
                            signature=eng.signature(), backend=self.backend)
@@ -265,14 +298,67 @@ class RoundPrograms:
                                                    broadcast, batches)
 
             fn = jax.jit(run)
+            if self.grad_chunks > 1:
+                # jit defers tracing to the first call, so the run-level
+                # chunk count is announced around every call — the traced
+                # body reads it via the dispatch context (DESIGN.md §11)
+                jitted, n = fn, self.grad_chunks
+
+                def fn(gathered_states, broadcast, batches):
+                    with grad_chunk_count(n):
+                        return jitted(gathered_states, broadcast, batches)
+
             self._client[key] = fn
             self.obs.event("program_cache_miss", cat="compile",
                            program="client", cohort=cohort, signature=key[1])
         return fn
 
+    def sharded_outputs(self, cohort: int) -> bool:
+        """Whether this cohort's round runs the §11 sharded-at-rest loop:
+        the run opted in, the engine's client split is active, and the
+        shard count is a power of two (the halving-tree boundary-alignment
+        condition — see repro.optim.reduce).  Cohorts that fail the gate
+        (vmap, fallback micro-cohorts, non-pow2 splits) keep the
+        replicated path; both paths are bitwise identical."""
+        if self.output_sharding != "sharded":
+            return False
+        eng = self.engine(cohort)
+        return bool(getattr(eng, "client_sharded", False)) and is_pow2(
+            eng.client_shards)
+
+    def aggregate_fn(self, cohort: int):
+        """Server aggregation program for this cohort: the shared host-path
+        ``aggregate`` jit, or — under the §11 sharded round loop — the
+        engine's ``aggregate_phase`` lowering of ``server_update``, which
+        consumes the client-sharded uploads in place (no round-boundary
+        all-gather) and reduces over the client-role axis in shard order."""
+        if not self.sharded_outputs(cohort):
+            return self.aggregate
+        key = self._key(cohort)
+        fn = self._aggregate_sharded.get(key)
+        if fn is None:
+            engine = self.engine(cohort)
+            method_ = self.method
+
+            def run(broadcast, uploads):
+                return engine.aggregate_phase(
+                    method_.server_update, broadcast, uploads)
+
+            fn = jax.jit(run)
+            self._aggregate_sharded[key] = fn
+            self.obs.event("program_cache_miss", cat="compile",
+                           program="aggregate_sharded", cohort=cohort,
+                           signature=key[1])
+        return fn
+
     def replicate_fn(self, cohort: int):
         """The round-boundary all-gather as its own program (None for
-        engines whose outputs are born replicated, i.e. vmap)."""
+        engines whose outputs are born replicated, i.e. vmap — and None
+        under the §11 sharded round loop, which is exactly the point:
+        outputs stay client-sharded at rest and the all_gather span
+        disappears from the trace)."""
+        if self.sharded_outputs(cohort):
+            return None
         key = self._key(cohort)
         fn = self._replicate.get(key, False)
         if fn is False:
@@ -366,6 +452,21 @@ class Federation:
 
     def _init_core(self, method, loss_fn, acc_fn, init_params, data, run_cfg):
         validate_method(method)
+        if run_cfg.output_sharding not in ("replicated", "sharded"):
+            raise ValueError(
+                f"unknown output_sharding {run_cfg.output_sharding!r}; "
+                "choose 'replicated' or 'sharded' (DESIGN.md §11)"
+            )
+        if run_cfg.output_sharding == "sharded" and run_cfg.backend == "vmap":
+            raise ValueError(
+                "output_sharding='sharded' is the mesh engines' layout "
+                "opt-out (backend='shard_map'/'mesh'); vmap outputs are "
+                "born replicated, so the request would be silently ignored"
+            )
+        if run_cfg.grad_chunks < 1:
+            raise ValueError(
+                f"grad_chunks must be >= 1, got {run_cfg.grad_chunks}"
+            )
         if run_cfg.update_impl:
             method = override_update_impl(method, run_cfg.update_impl)
         self.method = method
@@ -383,7 +484,9 @@ class Federation:
         self.programs = RoundPrograms(method, loss_fn, acc_fn,
                                       run_cfg.backend, run_cfg.shards,
                                       mesh=run_cfg.mesh,
-                                      strict_shards=self._strict_shards)
+                                      strict_shards=self._strict_shards,
+                                      output_sharding=run_cfg.output_sharding,
+                                      grad_chunks=run_cfg.grad_chunks)
         self.programs.obs = self.obs
         # built eagerly: validates backend/shards at construction (§3)
         self.engine = self.programs.engine(self.kprime)
@@ -493,7 +596,8 @@ class Federation:
         # client would deploy this round)
         accs = obs.timed("eval", self.programs.eval_fn(self.kprime),
                          new_states, self.broadcast, tests)
-        self.broadcast = obs.timed("aggregate", self.programs.aggregate,
+        self.broadcast = obs.timed("aggregate",
+                                   self.programs.aggregate_fn(self.kprime),
                                    self.broadcast, uploads)
         # write-back after upload (§12): the host store starts the d2h
         # copies here and overlaps them with the next round's host-side
@@ -594,6 +698,7 @@ class Federation:
             "participation": self.cfg.participation,
             "batch": self.cfg.batch,
             "local_iters": self.cfg.local_iters,
+            "grad_chunks": self.cfg.grad_chunks,
             "update_impl": self.cfg.update_impl,
             "availability": None if av is None else dataclasses.asdict(av.cfg),
             "store": self.store.describe(),

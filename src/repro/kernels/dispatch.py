@@ -109,36 +109,85 @@ def resolve_impl(impl: str, kernel: str) -> str:
 
 
 # ---------------------------------------------------------------------------
-# Model-shard context (DESIGN.md §11)
+# Mesh-axis contexts (DESIGN.md §11)
 #
-# When a mesh-aware federation engine traces the client phase inside a
-# shard_map whose mesh has a model-role axis, kernels that support a
-# model-sharded layout (pfedsop_update's flattened-N axis today) should
-# split their sweep over that axis — per-shard partial reductions plus a
-# cross-shard psum — instead of running replicated on every model shard.
-# The engine announces the axis with ``model_shard_axis`` around body
-# tracing; the §9 adapters read ``current_model_shard()`` host-side, so
-# the choice is baked into the trace like every other dispatch decision.
+# When a mesh-aware federation engine traces a phase inside a shard_map,
+# code that supports a sharded layout should split its work over the
+# announced mesh axis instead of running replicated on every shard.  The
+# engine announces the axis with a context manager around body tracing;
+# consumers read the ``current_*`` getter host-side, so the choice is
+# baked into the trace like every other dispatch decision.  Three roles:
+#
+#   model_shard_axis   kernels with a model-sharded layout (pfedsop_
+#                      update's flattened-N axis) split their sweep —
+#                      per-shard partials + cross-shard psum.
+#   client_shard_axis  the sharded aggregation program (§11 output-
+#                      sharding): cohort reductions (``repro.optim.
+#                      reduce.cohort_mean``/``cohort_sum``) combine
+#                      shard-local halving-tree partials in shard order.
+#   data_shard_axis    the per-client batch is sharded over the data
+#                      axis: ``optim.sgd.chunked_value_and_grad`` treats
+#                      the local slice as its gradient chunk and gathers
+#                      the chunk partials across the axis.
 # ---------------------------------------------------------------------------
 
+
+def _axis_context(stack: list):
+    @contextlib.contextmanager
+    def ctx(axis_name: str, n_shards: int):
+        stack.append((axis_name, int(n_shards)))
+        try:
+            yield
+        finally:
+            stack.pop()
+
+    def current() -> Optional[Tuple[str, int]]:
+        return stack[-1] if stack else None
+
+    return ctx, current
+
+
 _MODEL_SHARD_STACK: list = []
+_CLIENT_SHARD_STACK: list = []
+_DATA_SHARD_STACK: list = []
+
+model_shard_axis, current_model_shard = _axis_context(_MODEL_SHARD_STACK)
+client_shard_axis, current_client_shard = _axis_context(_CLIENT_SHARD_STACK)
+data_shard_axis, current_data_shard = _axis_context(_DATA_SHARD_STACK)
+
+model_shard_axis.__name__ = "model_shard_axis"
+client_shard_axis.__name__ = "client_shard_axis"
+data_shard_axis.__name__ = "data_shard_axis"
+
+
+# ---------------------------------------------------------------------------
+# Gradient-chunk context (DESIGN.md §11)
+#
+# ``FLRunConfig.grad_chunks`` fixes the *numeric semantics* of each local
+# SGD step: the gradient is the canonical chunk-tree reduction over n
+# equal batch chunks (``repro.optim.reduce``), whether those chunks are
+# computed in-body (data axis inactive) or one-per-device over the data
+# axis.  The run driver enters this context around every call of the
+# jitted client program — jit defers tracing to the first call, so the
+# count is read at trace time, like the mesh-axis contexts above.
+# ---------------------------------------------------------------------------
+
+_GRAD_CHUNK_STACK: list = []
 
 
 @contextlib.contextmanager
-def model_shard_axis(axis_name: str, n_shards: int):
-    """Declare that tracing happens inside a shard_map body whose mesh has
-    a model-role axis ``axis_name`` of size ``n_shards`` (engines only)."""
-    _MODEL_SHARD_STACK.append((axis_name, int(n_shards)))
+def grad_chunk_count(n: int):
+    """Declare the run-level gradient chunk count around client tracing."""
+    _GRAD_CHUNK_STACK.append(int(n))
     try:
         yield
     finally:
-        _MODEL_SHARD_STACK.pop()
+        _GRAD_CHUNK_STACK.pop()
 
 
-def current_model_shard() -> Optional[Tuple[str, int]]:
-    """(axis_name, n_shards) of the innermost active model-shard context,
-    or None outside any mesh-engine body (the common case)."""
-    return _MODEL_SHARD_STACK[-1] if _MODEL_SHARD_STACK else None
+def current_grad_chunks() -> int:
+    """The active gradient chunk count (1 outside any context)."""
+    return _GRAD_CHUNK_STACK[-1] if _GRAD_CHUNK_STACK else 1
 
 
 @contextlib.contextmanager
@@ -173,3 +222,7 @@ def resolve_update_impl(impl: str) -> str:
 register_kernel("pfedsop_update", knob="update_impl")
 register_kernel("rmsnorm")
 register_kernel("flash_gqa")
+# The attention backward dispatches independently of the forward: "reference"
+# is the blockwise scan-of-VJPs (oracle math), the kernel impls run the
+# fused two-pass flash backward (kernel.flash_gqa_bwd_pallas).
+register_kernel("flash_gqa_bwd")

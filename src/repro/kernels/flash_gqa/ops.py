@@ -17,13 +17,20 @@ axis to nkp = ceil((W + BQ)/BK) + 1 blocks per q row via a shifted k index
 map — see ``kernel.flash_gqa_grid`` for the exact grid and
 tests/test_kernels.py::TestFlashGQAPruned for the parity sweep.
 
-Differentiable: the forward pass runs the Pallas kernel; the backward pass
-recomputes attention q-block by q-block (same math as the oracle, one
-``jax.vjp`` per block inside a ``lax.scan`` that accumulates dk/dv in the
-carry), so backward live memory stays O(S·BQ) like the model's blockwise
-forward scan — no full O(S²) score tensor is ever materialised.  A fused
-flash backward *kernel* is a future perf item.  Under ``remat="block"``
-the recomputed forward stays on the kernel path.
+Differentiable, with a dispatched backward (``bwd`` knob, DESIGN.md §9
+``flash_gqa_bwd``):
+
+  "reference"  recomputes attention q-block by q-block (same math as the
+               oracle, one ``jax.vjp`` per block inside a ``lax.scan``
+               that accumulates dk/dv in the carry), so backward live
+               memory stays O(S·BQ) — no full O(S²) score tensor.
+  kernel imps  the forward additionally emits the per-row LSE residual
+               and the backward runs the fused two-pass flash backward
+               kernel (``kernel.flash_gqa_bwd_pallas``: a dq pass over
+               the forward's window-pruned grid, a dk/dv pass over the
+               q-blocks visible to each k-block).
+
+Under ``remat="block"`` the recomputed forward stays on the kernel path.
 """
 from __future__ import annotations
 
@@ -32,12 +39,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_gqa.kernel import _block_sizes, flash_gqa_pallas
+from repro.kernels.dispatch import resolve_impl
+from repro.kernels.flash_gqa.kernel import (_block_sizes,
+                                            flash_gqa_bwd_pallas,
+                                            flash_gqa_pallas)
 from repro.kernels.flash_gqa.ref import NEG_INF
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret, prune_window):
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret,
+               prune_window, bwd):
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
@@ -48,19 +60,47 @@ def _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret, prune_window)
 
 
 def _flash_gqa_fwd(q, k, v, window, softcap, scale, bq, bk, interpret,
-                   prune_window):
-    out = _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret,
-                     prune_window)
-    return out, (q, k, v)
+                   prune_window, bwd):
+    if resolve_impl(bwd, "flash_gqa_bwd") == "reference":
+        out = _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret,
+                         prune_window, bwd)
+        return out, (q, k, v, None, None)
+    # Kernel backward: run the residual forward so the backward passes get
+    # the per-row LSE without a second online-softmax sweep.
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out, lse = flash_gqa_pallas(qt, kt, vt, window=window, softcap=softcap,
+                                scale=scale, bq=bq, bk=bk,
+                                interpret=interpret,
+                                prune_window=prune_window,
+                                return_residual=True)
+    return jnp.swapaxes(out, 1, 2), (q, k, v, jnp.swapaxes(out, 1, 2), lse)
 
 
 def _flash_gqa_bwd(window, softcap, scale, bq, bk, interpret, prune_window,
-                   res, g):
+                   bwd, res, g):
+    impl = resolve_impl(bwd, "flash_gqa_bwd")
+    if impl != "reference":
+        q, k, v, out, lse = res  # model layout (B,S,H,D) / lse (B,H,S)
+        dq, dk, dv = flash_gqa_bwd_pallas(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), jnp.swapaxes(out, 1, 2), lse,
+            jnp.swapaxes(g, 1, 2), window=window, softcap=softcap,
+            scale=scale, bq=bq, bk=bk,
+            interpret=impl == "kernel_interpret" or interpret,
+            prune_window=prune_window)
+        return (jnp.swapaxes(dq, 1, 2), jnp.swapaxes(dk, 1, 2),
+                jnp.swapaxes(dv, 1, 2))
+    return _flash_gqa_bwd_reference(window, softcap, scale, bq, bk, res, g)
+
+
+def _flash_gqa_bwd_reference(window, softcap, scale, bq, bk, res, g):
     """Blockwise backward: for each q block, recompute its attention (the
     oracle math, f32) and pull the cotangent back through it; dk/dv are
     accumulated across blocks in the scan carry.  Positions are the
     canonical arange(S) the kernel's masks assume."""
-    q, k, v = res  # (B,S,H,D), (B,S,KV,D)
+    q, k, v = res[:3]  # (B,S,H,D), (B,S,KV,D)
     b, s, h, d = q.shape
     kvh = k.shape[2]
     grp = h // kvh
@@ -113,11 +153,17 @@ _flash_gqa.defvjp(_flash_gqa_fwd, _flash_gqa_bwd)
 @functools.partial(
     jax.jit,
     static_argnames=("window", "softcap", "scale", "bq", "bk", "interpret",
-                     "prune_window"),
+                     "prune_window", "bwd"),
 )
 def flash_gqa(q, k, v, window=None, softcap=None, scale=None,
               bq: int = 512, bk: int = 512, interpret: bool = False,
-              prune_window: bool = True):
-    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D).  Causal GQA attention."""
+              prune_window: bool = True, bwd: str = "auto"):
+    """q: (B,S,H,D), k/v: (B,S,KV,D) -> (B,S,H,D).  Causal GQA attention.
+
+    ``bwd`` selects the backward impl (dispatch vocabulary, kernel
+    ``flash_gqa_bwd``): "reference" keeps the blockwise scan-of-VJPs,
+    the kernel impls run the fused flash backward; "auto" resolves from
+    the host platform like every other dispatched kernel.
+    """
     return _flash_gqa(q, k, v, window, softcap, scale, bq, bk, interpret,
-                      prune_window)
+                      prune_window, bwd)

@@ -30,9 +30,10 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, INPUT_SHAPES, get_config
+from repro.fl.engine import MeshBackend
 from repro.launch import sharding as sh
 from repro.launch import steps as st
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import MeshSpec
 from repro.launch.roofline import collective_bytes_from_hlo, roofline_terms
 
 ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -72,10 +73,18 @@ def build_lowering(arch: str, shape_name: str, multi_pod: bool,
     elif variant == "seqshard":
         cfg = cfg.replace(seq_shard=True)
     shape = INPUT_SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    # one mesh code path with the federation engine (DESIGN.md §11): the
+    # production MeshSpec resolves through MeshBackend, and the train
+    # lowering below routes its client phase + Eq. 13 aggregation through
+    # the same engine the FL drivers run
+    spec = (MeshSpec.multi_pod(2, 16, 16) if multi_pod
+            else MeshSpec.single_pod(16, 16))
+    n_clients = spec.client_size if multi_pod else 1
+    engine = MeshBackend(n_clients, spec, strict=False,
+                         data_chunks=spec.data_size)
+    mesh = engine.mesh
     dsize = mesh.shape["data"]
     msize = mesh.shape["model"]
-    n_clients = mesh.shape.get("pod", 1)
     client_axis = "pod" if multi_pod else None
 
     if micro_batch == st.MICRO_BATCH:  # CLI default -> per-arch override
@@ -86,7 +95,7 @@ def build_lowering(arch: str, shape_name: str, multi_pod: bool,
 
     donate = ()
     if shape.kind == "train":
-        step = st.make_train_step(cfg, shape)
+        step = st.make_train_step(cfg, shape, engine=engine)
         donate = (0,)  # client state updated in place (params + delta)
         pp = lambda t: sh.param_pspecs(t, msize, client=True, client_axis=client_axis)
         gp = lambda t: sh.param_pspecs(t, msize)
@@ -170,6 +179,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, save: bool = True,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # jax < 0.5 returns [per-module dict]
+        cost = cost[0] if cost else {}
     coll = collective_bytes_from_hlo(compiled.as_text())
 
     record = dict(meta)

@@ -37,6 +37,8 @@ from repro.configs.base import InputShape, ModelConfig
 from repro.core import pfedsop as pf
 from repro.models import transformer as tf
 from repro.models.transformer import apply_long_context
+from repro.optim.reduce import cohort_mean
+from repro.optim.sgd import chunked_value_and_grad
 
 MICRO_BATCH = 32  # per-SGD-iteration batch for train_4k (T = 256/32 = 8)
 
@@ -141,13 +143,20 @@ def input_specs(cfg: ModelConfig, shape: InputShape, n_clients: int = 1,
 
 def make_train_step(cfg: ModelConfig, shape: InputShape,
                     pcfg: Optional[pf.PFedSOPConfig] = None,
-                    use_pfedsop: bool = True):
+                    use_pfedsop: bool = True, engine=None):
     """Returns train_step(state, global_delta, batches) -> (state', gd', loss).
 
     state/batches carry a leading client axis (size = #pods, 1 on the
     single-pod mesh).  ``use_pfedsop=False`` gives the plain-FedAvg round
     (the paper-baseline lowering used for the roofline delta of the
     technique itself).
+
+    ``engine`` is an optional ``repro.fl.engine.MeshBackend``: the lowering
+    then routes the per-client phase through ``client_phase_sharded`` and
+    Eq. 13 through ``aggregate_phase`` — the exact mesh code path the
+    federation drivers run (DESIGN.md §11) — instead of a hand-rolled
+    vmap + mean.  Both paths reduce with the canonical halving-tree
+    ``cohort_mean``, so the two lowerings agree bitwise on a shared mesh.
     """
     cfg = resolve_cfg(cfg, shape)
     pcfg = pcfg or pf.PFedSOPConfig()
@@ -155,13 +164,18 @@ def make_train_step(cfg: ModelConfig, shape: InputShape,
     def loss_fn(p, batch):
         return tf.lm_loss(p, cfg, batch)
 
+    # chunk-tree gradient: identical to jax.value_and_grad outside any
+    # grad-chunk/data-shard context, and the data-axis local SGD when the
+    # engine shards the per-client batch over the mesh's data axis (§11)
+    grad_fn = chunked_value_and_grad(loss_fn)
+
     def client_step(state, global_delta, batches):
         params = state["params"]
         if use_pfedsop:
             params, _ = pf.personalize(params, state["delta"], global_delta, pcfg)
 
         def sgd_iter(p, batch):
-            loss, g = jax.value_and_grad(loss_fn)(p, batch)
+            loss, g = grad_fn(p, batch)
             p = jax.tree.map(
                 lambda x, gi: (x.astype(jnp.float32) - pcfg.eta2 * gi.astype(jnp.float32)).astype(x.dtype),
                 p, g,
@@ -175,18 +189,35 @@ def make_train_step(cfg: ModelConfig, shape: InputShape,
         )
         return {"params": final, "delta": delta}, jnp.mean(losses)
 
+    def server(global_delta_, deltas, losses):
+        # Eq. 13 server aggregation — the canonical cohort mean, which IS
+        # the cross-pod all-reduce when traced inside ``aggregate_phase``
+        del global_delta_
+        new_global = jax.tree.map(
+            lambda d, m: m.astype(d.dtype), deltas, cohort_mean(deltas))
+        return new_global, cohort_mean(losses)
+
     def train_step(state, global_delta, batches):
         new_state, losses = jax.vmap(client_step, in_axes=(0, None, 0))(
             state, global_delta, batches
         )
-        # Eq. 13 server aggregation == the cross-pod all-reduce
-        new_global = jax.tree.map(
-            lambda d: jnp.mean(d.astype(jnp.float32), axis=0).astype(d.dtype),
-            new_state["delta"],
-        )
-        return new_state, new_global, jnp.mean(losses)
+        new_global, loss = server(global_delta, new_state["delta"], losses)
+        return new_state, new_global, loss
 
-    return train_step
+    if engine is None:
+        return train_step
+
+    def train_step_engine(state, global_delta, batches):
+        new_state, losses = engine.client_phase_sharded(
+            client_step, state, global_delta, batches)
+        if engine.client_sharded:
+            new_global, loss = engine.aggregate_phase(
+                server, global_delta, new_state["delta"], losses)
+        else:  # no client-role axis (single pod): outputs already replicated
+            new_global, loss = server(global_delta, new_state["delta"], losses)
+        return new_state, new_global, loss
+
+    return train_step_engine
 
 
 def make_prefill_step(cfg: ModelConfig, shape: InputShape):

@@ -43,6 +43,15 @@ def main():
                     help="use the 16x16 mesh (requires 256 devices)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--output-sharding", choices=["replicated", "sharded"],
+                    default="replicated",
+                    help="round-step lowering (DESIGN.md §11): 'sharded' "
+                         "routes the client phase + Eq. 13 aggregation "
+                         "through the federation MeshBackend engine, so "
+                         "client-state outputs stay sharded at rest on a "
+                         "client-axis (pods) mesh; 'replicated' keeps the "
+                         "plain vmap lowering.  Identical numerics — the "
+                         "two share the canonical cohort_mean reduction")
     ap.add_argument("--kernel-impl", default="auto",
                     choices=["auto", "reference", "kernel", "kernel_interpret"],
                     help="model-zoo kernel policy (rmsnorm/flash_gqa, "
@@ -83,7 +92,16 @@ def main():
                  event="run_start", mesh=dict(mesh.shape), arch=cfg.name)
 
     shape = InputShape("custom", args.seq_len, args.micro_batch * args.local_iters, "train")
-    step = st.make_train_step(cfg, shape)
+    if args.output_sharding == "sharded":
+        from repro.fl.engine import MeshBackend
+        from repro.launch.mesh import MeshSpec
+
+        spec = (MeshSpec.single_pod(16, 16) if args.production_mesh
+                else MeshSpec.host())
+        engine = MeshBackend(1, spec, strict=False, data_chunks=dsize)
+        step = st.make_train_step(cfg, shape, engine=engine)
+    else:
+        step = st.make_train_step(cfg, shape)
 
     params = tf.init_params(jax.random.PRNGKey(args.seed), cfg)
     zeros = jax.tree.map(jnp.zeros_like, params)

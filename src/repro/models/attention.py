@@ -97,9 +97,12 @@ def attention_fwd(p, cfg, x, positions, window, rope_base, q_block=512):
         from repro.kernels.flash_gqa.ops import flash_gqa
 
         with kernel_scope("flash_gqa", impl):
+            # the resolved forward impl also selects the backward: kernel
+            # forward -> fused flash backward kernel (same tiling/interpret
+            # mode), so train steps never fall back to the scan-of-VJPs.
             o = flash_gqa(q, k, v, window=window, softcap=cfg.attn_softcap,
                           bq=q_block, bk=q_block,
-                          interpret=impl == "kernel_interpret")
+                          interpret=impl == "kernel_interpret", bwd=impl)
         return jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
 
     qb = min(q_block, s)

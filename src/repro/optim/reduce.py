@@ -1,0 +1,123 @@
+"""Canonical ordered reductions for bitwise-reproducible aggregation.
+
+Floating-point addition is not associative, so "the mean over the client
+axis" (Eq. 13 of PAPER.md) only names a *value class*: ``jnp.mean`` lets
+XLA pick the association, and the pick differs between a host-side mean
+over a replicated cohort and a cross-device reduction over a sharded one.
+The sharded-at-rest round loop (DESIGN.md §11) requires the two to agree
+**bitwise**, so every cohort reduction in the codebase routes through one
+explicitly associated reduction instead:
+
+  ``ordered_axis_sum``  top-down binary halving over the leading axis —
+                        split n rows into [0, n//2) and [n//2, n), reduce
+                        each recursively, add the two partials.
+
+The payoff is a provable decomposition: for a client axis of D shards
+(D a power of two dividing the cohort K'), the first log2(D) levels of
+the halving tree split exactly at shard boundaries, so
+
+  tree(K' rows)  ==  tree_over_D_partials( tree(local K'/D rows) )
+
+with *identical* operands and association on both sides.  The sharded
+aggregation program (``MeshBackend.aggregate_phase``) therefore computes
+each shard's local partial, all-gathers the D partials in shard order,
+and applies the same halving tree over them — bit-identical to the
+replicated program, by construction rather than by luck.  The same
+scheme fixes the data-axis gradient reduction (``optim.sgd.
+chunked_value_and_grad``): the chunk tree is the unit of semantics, and
+"which device computed which chunk" stops mattering.
+
+Context plumbing: ``repro.kernels.dispatch.client_shard_axis`` /
+``data_shard_axis`` announce the active mesh axes around shard_map body
+tracing (the same host-side mechanism as ``model_shard_axis``), and the
+helpers here read them at trace time — no runtime branching.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dispatch import current_client_shard
+
+Pytree = Any
+
+
+def is_pow2(n: int) -> bool:
+    """True for the client-shard counts whose halving tree aligns with
+    shard boundaries (the sharded-aggregation eligibility test, §11)."""
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def ordered_axis_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over the leading axis with the canonical halving association.
+
+    Recursion on the *static* axis length, so the association is baked
+    into the trace: n rows split into [0, n//2) and [n//2, n).  O(n)
+    adds like any sum; the tree shape is the contract.
+    """
+    n = x.shape[0]
+    if n == 1:
+        return x[0]
+    h = n // 2
+    return ordered_axis_sum(x[:h]) + ordered_axis_sum(x[h:])
+
+
+def _sharded_sum(x32: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Local halving-tree partial + ordered cross-shard combine.
+
+    ``all_gather`` stacks the D partials in mesh-axis order (shard 0
+    first), and the same halving tree over that (D, ...) axis reproduces
+    the top log2(D) levels of the full tree — see the module docstring
+    for why this is bit-identical for power-of-two D.  A raw ``psum``
+    would leave the cross-shard association to the backend.
+    """
+    parts = jax.lax.all_gather(ordered_axis_sum(x32), axis_name, axis=0)
+    return ordered_axis_sum(parts)
+
+
+def cohort_size(n_local: int) -> int:
+    """The full cohort size K' given the local row count: ``n_local`` per
+    shard times the active client-shard count (1 outside any context)."""
+    shard = current_client_shard()
+    return n_local * (shard[1] if shard is not None else 1)
+
+
+def cohort_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Ordered f32 sum over the (possibly client-sharded) leading axis."""
+    shard = current_client_shard()
+    x32 = x.astype(jnp.float32)
+    if shard is None:
+        return ordered_axis_sum(x32)
+    return _sharded_sum(x32, shard[0])
+
+
+def cohort_mean(tree: Pytree) -> Pytree:
+    """Eq. 13's mean over the leading client axis, canonically associated.
+
+    Per leaf: f32 halving-tree sum over the cohort rows divided by the
+    FULL cohort size K'.  Inside a ``client_shard_axis`` context (the
+    sharded aggregation program) the rows are the shard-local slice and
+    the cross-shard combine follows the ordered decomposition above;
+    outside (the replicated program, the async driver's host-stacked
+    flush) it is the plain tree over all K' rows — the two agree bitwise.
+    Output is f32, matching the historical ``jnp.mean(x.astype(f32), 0)``
+    contract; callers cast back to the leaf dtype where they need to.
+    """
+    shard = current_client_shard()
+
+    def mean(d):
+        d32 = d.astype(jnp.float32)
+        if shard is None:
+            return ordered_axis_sum(d32) / d.shape[0]
+        return _sharded_sum(d32, shard[0]) / (d.shape[0] * shard[1])
+
+    return jax.tree.map(mean, tree)
+
+
+def chunk_mean(tree: Pytree) -> Pytree:
+    """Mean over a leading *chunk* axis of already-f32 stacked partials
+    (the ``grad_chunks`` reduction in ``optim.sgd``): the same halving
+    tree, no sharding context — chunk gathering is the caller's job."""
+    return jax.tree.map(lambda x: ordered_axis_sum(x) / x.shape[0], tree)

@@ -6,6 +6,11 @@ parameter dtype (bf16-safe); updates are cast back to the leaf dtype.
 
 These drive (a) the paper-faithful local SGD (Algorithm 2 uses plain SGD),
 (b) the baseline FL methods, and (c) the example LM training driver.
+
+``chunked_value_and_grad`` is the gradient entry point of the federated
+local-SGD phase (DESIGN.md §11): it fixes the per-step gradient to a
+canonical chunk-tree reduction so the same numbers fall out whether the
+chunks run in-body or one-per-device over the mesh's data axis.
 """
 from __future__ import annotations
 
@@ -14,8 +19,82 @@ from typing import Any, Callable, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import current_data_shard, current_grad_chunks
+from repro.optim.reduce import chunk_mean
+
 Pytree = Any
 Optimizer = Tuple[Callable, Callable]
+
+
+def chunked_value_and_grad(loss_fn: Callable) -> Callable:
+    """``jax.value_and_grad`` with a fixed chunk-tree reduction (§11).
+
+    The run-level ``grad_chunks = n`` knob (``FLRunConfig``, announced at
+    trace time via ``repro.kernels.dispatch.grad_chunk_count``) defines
+    each SGD step's semantics as: split the batch into n equal leading-
+    axis chunks, take ``value_and_grad`` per chunk, combine loss and
+    gradient with the canonical halving tree (``repro.optim.reduce``).
+    Two trace-time execution layouts produce those semantics bitwise:
+
+    - data axis inactive: reshape (B, ...) -> (n, B/n, ...) and compute
+      the chunks in-body (unrolled — n is small and static);
+    - inside a mesh engine's ``data_shard_axis`` context (the engine
+      sharded the batch's dim over the data axis, so the local slice IS
+      this device's chunk): compute the local chunk, all_gather the n
+      partials in axis order, apply the same tree.
+
+    Identical chunk operands + identical association => bitwise-equal
+    histories between ``data=1`` and data-sharded runs at equal
+    ``grad_chunks`` (tests/test_output_sharding.py).  n = 1 with no data
+    context is exactly ``jax.value_and_grad`` (the seed semantics).
+    """
+    base = jax.value_and_grad(loss_fn)
+
+    def fn(params, batch):
+        shard = current_data_shard()
+        if shard is not None:
+            axis_name, n = shard
+            loss, g = base(params, batch)  # local slice == this chunk
+            losses = jax.lax.all_gather(
+                loss.astype(jnp.float32), axis_name, axis=0)
+            grads = jax.tree.map(
+                lambda x: jax.lax.all_gather(
+                    x.astype(jnp.float32), axis_name, axis=0), g)
+            return _combine(losses, grads, params)
+        n = current_grad_chunks()
+        if n <= 1:
+            return base(params, batch)
+
+        def chunk(i):
+            cb = jax.tree.map(lambda x: _chunk_slice(x, n, i), batch)
+            return base(params, cb)
+
+        outs = [chunk(i) for i in range(n)]
+        losses = jnp.stack([l.astype(jnp.float32) for l, _ in outs])
+        grads = jax.tree.map(
+            lambda *xs: jnp.stack([x.astype(jnp.float32) for x in xs]),
+            *[g for _, g in outs],
+        )
+        return _combine(losses, grads, params)
+
+    return fn
+
+
+def _chunk_slice(x, n: int, i: int):
+    if x.shape[0] % n:
+        raise ValueError(
+            f"grad_chunks={n} must divide the local batch size "
+            f"{x.shape[0]} (leading batch axis of every leaf; no padding)"
+        )
+    return x.reshape((n, x.shape[0] // n) + x.shape[1:])[i]
+
+
+def _combine(losses, grads, params):
+    """Halving-tree mean of the stacked chunk partials; gradients cast
+    back to the parameter leaf dtype (the accumulators stay f32)."""
+    loss = chunk_mean(losses)
+    g = chunk_mean(grads)
+    return loss, jax.tree.map(lambda gi, p: gi.astype(p.dtype), g, params)
 
 
 def apply_updates(params: Pytree, updates: Pytree) -> Pytree:

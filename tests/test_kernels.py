@@ -333,3 +333,109 @@ class TestFlashGQAPruned:
         for a, b in zip(g_k, g_r):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=1e-4, atol=1e-4)
+
+
+class TestFlashGQABackwardKernel:
+    """Fused flash backward (DESIGN.md §9, kernel ``flash_gqa_bwd``): the
+    two-pass Pallas backward (dq over the forward's pruned grid, dk/dv
+    over the q-blocks visible to each k-block) must reproduce both the
+    scan-of-VJPs reference backward and the oracle's autodiff grads —
+    at full attention, under a sliding window (pruned grids on both
+    passes), with softcap, and at S not a multiple of the block sizes."""
+
+    # (b, h, kv, s, d, window, softcap, bq, bk)
+    CASES = [
+        (1, 4, 2, 128, 32, None, None, 32, 32),
+        (1, 4, 2, 128, 32, 48, None, 32, 32),
+        (1, 4, 2, 128, 32, 48, 30.0, 32, 32),
+        (2, 4, 4, 128, 32, None, 30.0, 32, 32),
+        (1, 4, 2, 80, 32, 24, None, 32, 32),   # S % block != 0 (halved)
+        (1, 8, 2, 256, 64, 16, None, 64, 32),  # bq != bk, heavy pruning
+    ]
+
+    @staticmethod
+    def _inputs(case):
+        b, h, kv, s, d = case[:5]
+        ks = jax.random.split(jax.random.PRNGKey(sum(case[:5])), 3)
+        q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+        return q, k, v
+
+    @pytest.mark.parametrize("case", CASES)
+    def test_grads_match_scan_vjp_and_oracle(self, case):
+        *_, window, softcap, bq, bk = case
+        q, k, v = self._inputs(case)
+
+        def loss(bwd):
+            def f(q, k, v):
+                o = flash_gqa(q, k, v, window=window, softcap=softcap,
+                              bq=bq, bk=bk, interpret=True, bwd=bwd)
+                return jnp.sum(o.astype(jnp.float32) ** 2)
+            return f
+
+        def loss_ref(q, k, v):
+            o = flash_gqa_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), window=window,
+                              softcap=softcap)
+            return jnp.sum(o.astype(jnp.float32) ** 2)
+
+        g_kern = jax.grad(loss("kernel_interpret"), argnums=(0, 1, 2))(q, k, v)
+        g_scan = jax.grad(loss("reference"), argnums=(0, 1, 2))(q, k, v)
+        g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+        for a, b_, c in zip(g_kern, g_scan, g_ref):
+            scale = float(jnp.max(jnp.abs(c))) + 1e-30
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=1e-4, atol=1e-4 * scale)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-4, atol=1e-4 * scale)
+
+    def test_residual_forward_matches_plain_forward(self):
+        """return_residual must not perturb the output, and the emitted
+        LSE must equal the oracle's log-sum-exp of the masked scaled
+        scores (the quantity both backward passes subtract)."""
+        case = (1, 4, 2, 128, 32, 48, 30.0, 32, 32)
+        *_, window, softcap, bq, bk = case
+        q, k, v = (jnp.swapaxes(x, 1, 2) for x in self._inputs(case))
+        out_plain = flash_gqa_pallas(q, k, v, window=window, softcap=softcap,
+                                     bq=bq, bk=bk, interpret=True)
+        out, lse = flash_gqa_pallas(q, k, v, window=window, softcap=softcap,
+                                    bq=bq, bk=bk, interpret=True,
+                                    return_residual=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out_plain))
+
+        b, h, s, d = q.shape
+        g = h // k.shape[1]
+        sc = d**-0.5
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q * sc,
+                            jnp.repeat(k, g, axis=1))
+        scores = softcap * jnp.tanh(scores / softcap)
+        pos = jnp.arange(s)
+        mask = (pos[None, :] <= pos[:, None]) & \
+               ((pos[:, None] - pos[None, :]) < window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        lse_ref = jax.scipy.special.logsumexp(scores, axis=-1)
+        np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_bfloat16_grads(self):
+        """bf16 inputs: the fused backward accumulates in f32 scratch and
+        casts at the edges, like the forward."""
+        case = (1, 4, 2, 128, 32, 48, None, 32, 32)
+        *_, window, softcap, bq, bk = case
+        q, k, v = (x.astype(jnp.bfloat16) for x in self._inputs(case))
+
+        def loss(bwd):
+            def f(q, k, v):
+                o = flash_gqa(q, k, v, window=window, bq=bq, bk=bk,
+                              interpret=True, bwd=bwd)
+                return jnp.sum(o.astype(jnp.float32) ** 2)
+            return f
+
+        g_kern = jax.grad(loss("kernel_interpret"), argnums=(0, 1, 2))(q, k, v)
+        g_scan = jax.grad(loss("reference"), argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g_kern, g_scan):
+            assert a.dtype == jnp.bfloat16
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b_, np.float32),
+                                       rtol=3e-2, atol=3e-2)

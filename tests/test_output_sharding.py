@@ -1,0 +1,107 @@
+"""Sharded-at-rest round loop parity grid (DESIGN.md §11, ISSUE 10).
+
+``FLRunConfig.output_sharding="sharded"`` keeps engine outputs
+client-sharded through the round boundary and lowers Eq. 13's server
+aggregation into the sharded program; the contract is that this is a pure
+layout change — loss/accuracy histories stay **bitwise** identical to
+``"replicated"`` on the same backend, across {shard_map, mesh} ×
+{sync, async} × {device, host} cohort stores, with the interpret kernel
+on the hot path.  The data-axis local SGD rides the same grid:
+``grad_chunks`` equal to the mesh's data-axis size shards each client's
+batch over ``data`` with bitwise-identical histories vs the in-body
+chunk path.
+
+Subprocess: the 8-device (2,2,2) mesh must be forced before jax
+initialises (cf. tests/test_multipod.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_SHARDED_SCRIPT = textwrap.dedent(
+    """
+    import dataclasses
+    import jax
+    assert len(jax.devices()) == 8, jax.devices()
+
+    from repro.configs.resnet_cifar import SMALL_CNN as CFG
+    from repro.core.baselines import METHODS
+    from repro.data import (FederatedData, dirichlet_partition,
+                            make_class_conditional_images)
+    from repro.fl import AsyncFederation, Federation, FLRunConfig, StoreConfig
+    from repro.fl.runtime import masked_accuracy
+    from repro.models import cnn
+
+    images, labels = make_class_conditional_images(600, CFG.n_classes,
+                                                   CFG.cnn_image_size, seed=0)
+    parts = dirichlet_partition(labels, 8, alpha=0.3, seed=0)
+    data = FederatedData.from_partition(images, labels, parts, seed=0)
+    params = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    loss = lambda p, b: cnn.loss_fn(p, CFG, b)
+    acc = masked_accuracy(lambda p, t: cnn.apply(p, CFG, t["images"]))
+
+    def cfg(backend, mesh="", **kw):
+        # rounds=3 so re-participating clients personalize (the batched
+        # pfedsop_update kernel is live from round 2 on); K'=4 divides
+        # the 2 pods and the 4-way shard_map split
+        return FLRunConfig(n_clients=8, participation=0.5, rounds=3,
+                           batch=8, local_iters=2, seed=1, backend=backend,
+                           mesh=mesh, update_impl="kernel_interpret", **kw)
+
+    def run(driver, c):
+        method = METHODS["pfedsop"]()
+        fed = (Federation if driver == "sync" else AsyncFederation)(
+            method, loss, acc, params, data, c)
+        return fed.run()
+
+    # -- sharded == replicated, same backend, full grid -------------------
+    for backend, mesh_spec in [("shard_map", ""), ("mesh", "pods:2x2x2")]:
+        for driver in ["sync", "async"]:
+            for store in ["device", "host"]:
+                base = cfg(backend, mesh_spec,
+                           store=StoreConfig(kind=store))
+                h_rep = run(driver, base)
+                h_sh = run(driver, dataclasses.replace(
+                    base, output_sharding="sharded"))
+                key = (backend, driver, store)
+                assert h_rep["loss"] == h_sh["loss"], (key, h_rep["loss"],
+                                                       h_sh["loss"])
+                assert h_rep["acc"] == h_sh["acc"], key
+                print("GRID_OK", backend, driver, store)
+    print("SHARDED_GRID_BITWISE_OK")
+
+    # -- data-axis local SGD: in-body chunks == data-axis sharded ---------
+    h_chunk_ref = run("sync", cfg("vmap", grad_chunks=2))
+    h_chunk = run("sync", cfg("mesh", "pods:2x2x2", grad_chunks=2,
+                              output_sharding="sharded"))
+    assert h_chunk_ref["loss"] == h_chunk["loss"], (h_chunk_ref["loss"],
+                                                    h_chunk["loss"])
+    assert h_chunk_ref["acc"] == h_chunk["acc"]
+    # the chunked gradient is a real semantic knob, not a no-op
+    h_plain = run("sync", cfg("vmap"))
+    assert h_chunk_ref["loss"] != h_plain["loss"]
+    print("DATA_AXIS_CHUNKS_BITWISE_OK")
+    """
+)
+
+
+def test_output_sharding_parity_forced_8_devices():
+    """sharded == replicated bitwise across {shard_map, mesh} x
+    {sync, async} x {device, host} stores, plus data-axis grad-chunk
+    parity, in one subprocess (amortizes the forced-device compiles)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    for marker in ["SHARDED_GRID_BITWISE_OK", "DATA_AXIS_CHUNKS_BITWISE_OK"]:
+        assert marker in res.stdout, res.stdout
